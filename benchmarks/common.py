@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: timing, CSV emission, cached MLP fixture."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Iterable, List, Tuple
+
+import jax
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+N_SAMPLES = int(os.environ.get("BENCH_SAMPLES", "64"))
+CSV_ROWS: "List[Tuple[str, float, str]]" = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    CSV_ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> "tuple[float, object]":
+    out = jax.block_until_ready(fn(*args, **kw))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = jax.block_until_ready(fn(*args, **kw))
+    dt = (time.perf_counter() - t0) / repeats
+    return dt * 1e6, out
+
+
+_FIXTURE = None
+
+
+def mnist_like_fixture():
+    """Train (once per process) the paper's 400x120x84x10 MLP on the
+    synthetic digit set; cache weights on disk across runs."""
+    global _FIXTURE
+    if _FIXTURE is not None:
+        return _FIXTURE
+    import jax.numpy as jnp
+
+    from repro.core.digital import accuracy, train_mlp
+    from repro.data.digits import train_test_split
+
+    os.makedirs(ART, exist_ok=True)
+    cache = os.path.join(ART, "bench_mlp.npz")
+    xtr, ytr, xte, yte = train_test_split(6000, 1000, seed=0, noise=0.4)
+    if os.path.exists(cache):
+        z = np.load(cache)
+        params = [
+            (jnp.asarray(z[f"w{i}"]), jnp.asarray(z[f"b{i}"])) for i in range(3)
+        ]
+    else:
+        params = train_mlp(
+            jax.random.PRNGKey(0), [400, 120, 84, 10], xtr, ytr, steps=600
+        )
+        np.savez(
+            cache,
+            **{f"w{i}": np.asarray(w) for i, (w, _) in enumerate(params)},
+            **{f"b{i}": np.asarray(b) for i, (_, b) in enumerate(params)},
+        )
+    acc = accuracy(params, xte, yte)
+    _FIXTURE = (params, xte, yte, acc)
+    return _FIXTURE

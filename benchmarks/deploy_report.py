@@ -1,0 +1,29 @@
+"""IMAC deployment planning for the assigned archs (the paper's
+design-space exploration at LLM scale): tiles/devices/power/area per
+architecture on 512x512 PCM subarrays (+ a tech sweep for one arch)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import ARCHS
+from repro.core.planner import plan_arch
+
+
+def run():
+    for name in sorted(ARCHS):
+        rep = plan_arch(ARCHS[name], tech="PCM", array_rows=512, array_cols=512)
+        r = rep.as_row()
+        emit(
+            f"deploy/{name}",
+            0.0,
+            f"tiles={r['tiles']};devices={r['devices']:.3e};"
+            f"power_w={r['est_power_w']};area_mm2={r['area_mm2']};"
+            f"latency_ns={r['est_latency_ns']}",
+        )
+    # Device-technology sensitivity on one mid-size arch.
+    for tech in ("MRAM", "RRAM", "CBRAM", "PCM"):
+        rep = plan_arch(ARCHS["yi-9b"], tech=tech, array_rows=512, array_cols=512)
+        emit(
+            f"deploy/yi-9b/{tech}",
+            0.0,
+            f"power_w={rep.as_row()['est_power_w']}",
+        )

@@ -1,0 +1,38 @@
+"""Pallas kernel microbenches (interpret mode on CPU: correctness-scale
+timings; TPU wall-times come from the roofline analysis instead)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.imac_mvm.ref import imac_mvm_ref
+from repro.kernels.tridiag.ref import tridiag_ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    # tridiag: solver-shaped workload (lanes = tiles*samples)
+    shape = (2048, 64)
+    d = 2.0 + jax.random.uniform(key, shape)
+    dl = -jax.random.uniform(jax.random.PRNGKey(1), shape)
+    du = -jax.random.uniform(jax.random.PRNGKey(2), shape)
+    b = jax.random.normal(jax.random.PRNGKey(3), shape)
+    us, _ = time_call(jax.jit(tridiag_ref), dl, d, du, b)
+    emit("kernels/tridiag_ref_2048x64", us, f"systems={shape[0]}")
+
+    # imac_mvm: analog projection (ref path; kernel validated in tests)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (256, 1024))
+    w = jax.random.uniform(jax.random.PRNGKey(5), (1024, 1024), minval=-1, maxval=1)
+    us, _ = time_call(jax.jit(lambda x, w: imac_mvm_ref(x, w, dac_bits=8, levels=16)), x, w)
+    flops = 2 * 256 * 1024 * 1024
+    emit("kernels/imac_mvm_ref_256x1024x1024", us, f"gflops={flops/us/1e3:.2f}")
+
+    # decode attention: long-context single step
+    q = jax.random.normal(jax.random.PRNGKey(6), (4, 32, 128), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(7), (4, 8192, 8, 128), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(8), (4, 8192, 8, 128), jnp.bfloat16)
+    us, _ = time_call(jax.jit(decode_attention_ref), q, k, v)
+    emit("kernels/decode_attn_ref_s8192", us, "bf16;gqa4x")

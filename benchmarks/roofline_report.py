@@ -1,0 +1,77 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART, emit
+
+
+def load_cells(dirname: str = None):
+    dirname = dirname or os.path.join(ART, "dryrun")
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def markdown_table(cells) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful_flops | HBM GB/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for c in cells:
+        if c.get("skipped"):
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c.get('mesh','-')} | — | — | — | "
+                f"SKIP ({c['reason'][:40]}...) | — | — |"
+            )
+            continue
+        if "error" in c:
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | "
+                f"ERROR | — | — |"
+            )
+            continue
+        r = c["roofline"]
+        mem = c.get("memory", {})
+        hbm = (
+            mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        ) / 1e9
+        lines.append(
+            "| {arch} | {shape} | {mesh} | {c:.3f} | {m:.3f} | {co:.3f} | "
+            "{dom} | {uf} | {hbm:.1f} |".format(
+                arch=c["arch"], shape=c["shape"], mesh=c["mesh"],
+                c=r["compute_s"] or 0, m=r["memory_s"] or 0,
+                co=r["collective_s"] or 0, dom=r["dominant"],
+                uf=f"{r['useful_flops_ratio']:.2f}" if r.get("useful_flops_ratio") else "—",
+                hbm=hbm,
+            )
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run():
+    cells = load_cells()
+    n_ok = sum(1 for c in cells if not c.get("skipped") and "error" not in c)
+    n_skip = sum(1 for c in cells if c.get("skipped"))
+    n_err = sum(1 for c in cells if "error" in c)
+    emit("roofline/cells", 0.0, f"ok={n_ok};skipped={n_skip};errors={n_err}")
+    for c in cells:
+        if c.get("skipped") or "error" in c:
+            continue
+        r = c["roofline"]
+        emit(
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            (r["compute_s"] or 0) * 1e6,
+            f"dominant={r['dominant']};mem_s={r['memory_s']:.3f};"
+            f"coll_s={r['collective_s']:.3f};useful={r.get('useful_flops_ratio') or 0:.2f}",
+        )
+    out = os.path.join(ART, "roofline_table.md")
+    with open(out, "w") as f:
+        f.write(markdown_table(cells))
+    emit("roofline/table_written", 0.0, out)

@@ -1,0 +1,60 @@
+"""Benchmark harness: one function per paper table + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  table3   — paper Table III (partitioning design space)
+  table4   — paper Table IV (device technologies)
+  solver   — crossbar circuit-solver scaling (the adapted SPICE engine)
+  kernels  — Pallas kernel workloads (ref-path timings on CPU)
+  deploy   — IMAC deployment planning for the 10 assigned archs
+  roofline — (arch x shape x mesh) roofline table from dry-run artifacts
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table3,table4,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        deploy_report,
+        kernels_bench,
+        roofline_report,
+        solver_scaling,
+        table3_partitioning,
+        table4_device_tech,
+    )
+
+    benches = {
+        "table3": table3_partitioning.run,
+        "table4": table4_device_tech.run,
+        "solver": solver_scaling.run,
+        "kernels": kernels_bench.run,
+        "deploy": deploy_report.run,
+        "roofline": roofline_report.run,
+    }
+    selected = (
+        [s.strip() for s in args.only.split(",")] if args.only else list(benches)
+    )
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        try:
+            benches[name]()
+        except Exception as e:  # keep the harness going; report at exit
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print(f"FAILED benches: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Circuit-solver scaling: batched tridiagonal-GS vs dense MNA oracle.
+
+The adapted engine's value proposition: one SPICE-style DC solve per
+(tile x sample) batched on accelerator-friendly primitives. Reports
+us/solve across array sizes and the dense-MNA crossover.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.devices import MRAM
+from repro.core.solver import (
+    CircuitParams,
+    solve_crossbar,
+    solve_dense_mna,
+    suggest_iters,
+)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for size in (16, 32, 64, 128, 256, 512):
+        g = jax.random.uniform(
+            key, (size, size), minval=MRAM.g_off, maxval=MRAM.g_on
+        )
+        v = jax.random.uniform(jax.random.PRNGKey(1), (size,), maxval=0.8)
+        cp = CircuitParams(gs_iters=suggest_iters(size, size))
+        fn = jax.jit(lambda g, v: solve_crossbar(g, v, cp).i_out)
+        us, _ = time_call(fn, g, v)
+        emit(f"solver/gs_{size}x{size}", us, f"iters={cp.gs_iters}")
+        if size <= 32:
+            fn_mna = jax.jit(lambda g, v: solve_dense_mna(g, v, cp).i_out)
+            us_mna, _ = time_call(fn_mna, g, v)
+            emit(f"solver/mna_{size}x{size}", us_mna, "oracle")
+
+    # Batched throughput: the paper's workload shape (52 tiles x batch).
+    g = jax.random.uniform(key, (104, 32, 32), minval=MRAM.g_off, maxval=MRAM.g_on)
+    v = jax.random.uniform(jax.random.PRNGKey(2), (64, 104, 32), maxval=0.8)
+    cp = CircuitParams(gs_iters=suggest_iters(32, 32))
+    fn = jax.jit(lambda g, v: solve_crossbar(g[None], v, cp).i_out)
+    us, out = time_call(fn, g, v)
+    n_solves = 64 * 104
+    emit("solver/batched_tiles", us / n_solves, f"solves={n_solves};us_total={us:.0f}")

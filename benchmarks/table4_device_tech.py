@@ -1,0 +1,34 @@
+"""Paper Table IV: memristive device technology sweep (MRAM/RRAM/CBRAM/
+PCM) at fixed H_P=[13,4,3], V_P=[4,3,1]."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import N_SAMPLES, emit, mnist_like_fixture
+from repro.configs.imac_mnist import TABLE_IV_CONFIGS
+from repro.core.evaluate import test_imac
+
+
+def run():
+    params, xte, yte, dig_acc = mnist_like_fixture()
+    rows = []
+    for name, cfg in TABLE_IV_CONFIGS:
+        t0 = time.perf_counter()
+        res = test_imac(params, xte, yte, cfg, n_samples=N_SAMPLES, chunk=32)
+        dt = time.perf_counter() - t0
+        emit(
+            f"table4/{name}",
+            dt / res.n_samples * 1e6,
+            f"acc={res.accuracy:.4f};power_w={res.avg_power:.3f};"
+            f"rlow={cfg.resolved_tech().r_low:.0f};"
+            f"rhigh={cfg.resolved_tech().r_high:.0f}",
+        )
+        rows.append((name, res))
+    by = {n: r for n, r in rows}
+    trends = {
+        "pcm_least_power": by["PCM"].avg_power == min(r.avg_power for _, r in rows),
+        "pcm_top_accuracy": by["PCM"].accuracy == max(r.accuracy for _, r in rows),
+        "rram_more_power_than_pcm": by["RRAM"].avg_power > by["PCM"].avg_power,
+    }
+    emit("table4/trends", 0.0, ";".join(f"{k}={v}" for k, v in trends.items()))
+    return rows

@@ -1,0 +1,48 @@
+"""IMAC design-space exploration: the paper's core use-case.
+
+Sweeps subarray size x device technology for the MNIST MLP and prints
+the accuracy/power grid — the cross product of Tables III and IV (the
+multi-objective trade-off surface IMAC-Sim exists to expose).
+
+Run:  PYTHONPATH=src python examples/design_space.py [--samples 64]
+"""
+import argparse
+
+import jax
+
+from repro.configs.imac_mnist import TOPOLOGY
+from repro.core import IMACConfig
+from repro.core.digital import train_mlp
+from repro.core.evaluate import test_imac
+from repro.data.digits import train_test_split
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=48)
+    ap.add_argument("--sizes", default="32,64,128")
+    ap.add_argument("--techs", default="MRAM,RRAM,CBRAM,PCM")
+    args = ap.parse_args()
+
+    xtr, ytr, xte, yte = train_test_split(4000, 500, seed=0, noise=0.4)
+    params = train_mlp(jax.random.PRNGKey(0), TOPOLOGY, xtr, ytr, steps=500)
+
+    sizes = [int(s) for s in args.sizes.split(",")]
+    techs = args.techs.split(",")
+    print(f"{'':>8s}" + "".join(f"{t:>22s}" for t in techs))
+    for size in sizes:
+        row = [f"{size:>4d}x{size:<3d}"]
+        for tech in techs:
+            cfg = IMACConfig(tech=tech, array_rows=size, array_cols=size)
+            res = test_imac(
+                params, xte, yte, cfg, n_samples=args.samples, chunk=24
+            )
+            row.append(f"acc={res.accuracy:.2f} p={res.avg_power:5.2f}W")
+        print(row[0] + "".join(f"{c:>22s}" for c in row[1:]))
+    print("\nrows: subarray size; accuracy falls / power falls as arrays "
+          "grow (IR drop); PCM stays accurate at the lowest power "
+          "(paper Tables III-IV).")
+
+
+if __name__ == "__main__":
+    main()

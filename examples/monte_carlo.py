@@ -1,0 +1,60 @@
+"""Monte-Carlo device-variation analysis — IMAC-Sim's design-space
+exploration under programming variation (DeviceTech.sigma_rel).
+
+Each trial redraws every memristor's conductance from a lognormal
+around its programmed level (device-to-device variation), re-simulates
+the full circuit, and reports the accuracy distribution — the
+yield-style question a designer actually asks before committing to a
+technology.
+
+Run:  PYTHONPATH=src python examples/monte_carlo.py [--trials 8]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.imac_mnist import TOPOLOGY
+from repro.core import IMACConfig
+from repro.core.devices import get_tech
+from repro.core.digital import train_mlp
+from repro.core.evaluate import test_imac
+from repro.data.digits import train_test_split
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=6)
+    ap.add_argument("--samples", type=int, default=48)
+    ap.add_argument("--sigma", type=float, default=0.10)
+    args = ap.parse_args()
+
+    xtr, ytr, xte, yte = train_test_split(4000, 500, seed=0, noise=0.4)
+    params = train_mlp(jax.random.PRNGKey(0), TOPOLOGY, xtr, ytr, steps=500)
+
+    for tech_name in ("PCM", "MRAM"):
+        tech = dataclasses.replace(get_tech(tech_name), sigma_rel=args.sigma)
+        cfg = IMACConfig(tech=tech, array_rows=32, array_cols=32)
+        accs = []
+        for t in range(args.trials):
+            res = test_imac(
+                params, xte, yte, cfg,
+                n_samples=args.samples, chunk=24,
+                variation_key=jax.random.PRNGKey(100 + t),
+            )
+            accs.append(res.accuracy)
+        accs = np.array(accs)
+        print(
+            f"{tech_name} (sigma={args.sigma:.2f}): "
+            f"acc mean={accs.mean():.4f} min={accs.min():.4f} "
+            f"max={accs.max():.4f} std={accs.std():.4f} "
+            f"({args.trials} trials x {args.samples} samples)"
+        )
+    print("\nvariation tolerance is itself technology-dependent — the "
+          "high-ON/OFF technologies keep margin under sigma_rel "
+          "programming noise; this is Table IV's story extended to yield.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end LM training driver on the fault-tolerant substrate.
+
+Trains a granite-family model on the synthetic token stream for a few
+hundred steps with WSD schedule, async checkpointing and auto-resume.
+Default is a ~25M-parameter config sized for this CPU container
+(--full switches to a ~100M config for real hardware); loss decreases
+measurably as the model learns the stream's successor structure.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic_lm import make_train_stream
+from repro.models import build_model
+from repro.train import TrainConfig, Trainer
+
+
+def small_config(full: bool):
+    base = get_config("granite-3-8b")
+    if full:  # ~100M params
+        return dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab=16384,
+            param_dtype="float32", compute_dtype="float32",
+        )
+    return dataclasses.replace(  # ~25M params, CPU-friendly
+        base, n_layers=6, d_model=384, n_heads=6, n_kv_heads=2,
+        head_dim=64, d_ff=1024, vocab=8192,
+        param_dtype="float32", compute_dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="artifacts/train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = small_config(args.full)
+    model = build_model(cfg)
+    print(f"model: {cfg.name}-mini  ~{cfg.n_params()/1e6:.0f}M params")
+
+    shape = ShapeConfig("lm", seq_len=256, global_batch=8, kind="train")
+    tcfg = TrainConfig(
+        peak_lr=3e-3,
+        total_steps=args.steps,
+        schedule="wsd",
+        checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=50,
+        log_every=10,
+    )
+    trainer = Trainer(model, tcfg)
+    trainer.install_preemption_hook()
+    stream = make_train_stream(cfg, shape, seed=0)
+
+    def log(step, metrics):
+        print(f"step {step:4d}  loss {metrics['loss']:.4f}  "
+              f"lr {metrics['lr']:.2e}  gnorm {metrics['grad_norm']:.2f}")
+
+    params, history = trainer.fit(jax.random.PRNGKey(0), stream, on_metrics=log)
+    stream.close()
+    first, last = history[0][1]["loss"], history[-1][1]["loss"]
+    print(f"\nloss: {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    print(f"checkpoints: {trainer.ckpt.all_steps()} in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""IMAC-Sim-JAX: circuit-level simulation of in-memory analog computing,
+plus the multi-architecture distributed training/serving substrate it is
+embedded in. See DESIGN.md for the system map."""
+
+__version__ = "1.0.0"

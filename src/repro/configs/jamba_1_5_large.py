@@ -1,0 +1,32 @@
+"""jamba-1.5-large-398b — Mamba+attention 1:7 interleave with 16-expert
+top-2 MoE every other layer [arXiv:2403.19887; hf]. 72 layers = 9 blocks
+of 8 (attention at block index 4); hybrid => runs long_500k (KV cache
+only for the 9 attention layers, context-parallel)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab=65536,
+    ssm_type="mamba",
+    attn_period=8,
+    attn_period_offset=4,
+    d_state=16,
+    d_conv=4,
+    ssm_expand=2,
+    n_experts=16,
+    n_shared_experts=0,
+    experts_per_token=2,
+    moe_d_ff=24576,
+    moe_every=2,
+    moe_offset=1,
+    param_dtype="bfloat16",
+    fsdp_over_pod=True,
+    supports_long_context=True,
+)

@@ -1,0 +1,24 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 routed experts top-8
+[arXiv:2501.kimi2; unverified]. Assignment spec: 61L d7168 64H GQA kv=8,
+expert d_ff 2048, vocab 163840. (The real K2 uses MLA; the assignment
+pins GQA kv=8, which we follow — switchable via attn_type.)"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=18432,
+    vocab=163840,
+    n_experts=384,
+    n_shared_experts=1,
+    experts_per_token=8,
+    moe_d_ff=2048,
+    first_k_dense=1,
+    param_dtype="bfloat16",
+    fsdp_over_pod=True,
+)

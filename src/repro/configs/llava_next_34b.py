@@ -1,0 +1,22 @@
+"""llava-next-34b — VLM, anyres tiling [hf:llava-hf/llava-v1.6; unverified].
+
+Backbone only (Yi-34B-like): 60L d7168 56H kv8. The vision frontend is a
+STUB per the assignment: input_specs() provides precomputed patch
+embeddings (anyres base 576 patches + one 576-patch tile stand-in),
+prepended to the token sequence. 56 heads are not divisible by the
+model axis; attention runs sequence-parallel."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab=64000,
+    rope_theta=5e6,
+    modality_prefix=1152,   # 576 base + 576 anyres tile patch embeddings
+)

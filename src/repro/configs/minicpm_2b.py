@@ -1,0 +1,23 @@
+"""minicpm-2b — llama-like MHA with WSD schedule + mu-p style scaling
+[arXiv:2404.06395; hf]. d_model=2304, 36 heads => head_dim 64."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    head_dim=64,
+    d_ff=5760,
+    vocab=122753,
+    rope_theta=1e4,
+    tie_embeddings=True,
+    scale_emb=12.0,       # MiniCPM embedding scale
+    scale_depth=1.4,      # residual branch scaled by scale_depth/sqrt(L)
+    scale_logits=256.0 / 2304.0,  # mu-p logit scale (dim_model_base=256)
+)
+
+# Training schedule: WSD (warmup-stable-decay) — consumed by optim/schedule.
+WSD_SCHEDULE = {"warmup_steps": 0.01, "stable_frac": 0.8, "decay_frac": 0.19}

@@ -1,0 +1,18 @@
+"""phi3-medium-14b — RoPE SwiGLU GQA [arXiv:2404.14219; unverified].
+
+40 heads do not divide the 16-wide model axis; the sharding rules fall
+back to sequence-parallel attention (see sharding/rules.py)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    head_dim=128,
+    d_ff=17920,
+    vocab=100352,
+    rope_theta=1e4,
+)

@@ -1,0 +1,48 @@
+"""Architecture registry: --arch <id> resolution."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+from repro.configs.yi_9b import CONFIG as YI_9B
+from repro.configs.granite_3_8b import CONFIG as GRANITE_3_8B
+from repro.configs.phi3_medium_14b import CONFIG as PHI3_MEDIUM
+from repro.configs.minicpm_2b import CONFIG as MINICPM_2B
+from repro.configs.rwkv6_1_6b import CONFIG as RWKV6_1_6B
+from repro.configs.llava_next_34b import CONFIG as LLAVA_NEXT_34B
+from repro.configs.deepseek_v3_671b import CONFIG as DEEPSEEK_V3
+from repro.configs.kimi_k2_1t import CONFIG as KIMI_K2
+from repro.configs.jamba_1_5_large import CONFIG as JAMBA_1_5
+from repro.configs.seamless_m4t_large import CONFIG as SEAMLESS_M4T
+
+ARCHS: "dict[str, ModelConfig]" = {
+    c.name: c
+    for c in (
+        YI_9B,
+        GRANITE_3_8B,
+        PHI3_MEDIUM,
+        MINICPM_2B,
+        RWKV6_1_6B,
+        LLAVA_NEXT_34B,
+        DEEPSEEK_V3,
+        KIMI_K2,
+        JAMBA_1_5,
+        SEAMLESS_M4T,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in ARCHS:
+        return ARCHS[name]
+    # Accept underscore variants and unambiguous prefixes.
+    canon = name.replace("_", "-")
+    if canon in ARCHS:
+        return ARCHS[canon]
+    matches = [k for k in ARCHS if k.startswith(canon)]
+    if len(matches) == 1:
+        return ARCHS[matches[0]]
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+
+
+def list_archs() -> "list[str]":
+    return sorted(ARCHS)

@@ -1,0 +1,19 @@
+"""rwkv6-1.6b (Finch) — attention-free, data-dependent decay
+[arXiv:2404.05892; unverified]. 32 heads of 64 (d_model/64); ffn 7168.
+O(1)-state decode => runs the long_500k shape."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,          # wkv heads = d_model / 64
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab=65536,
+    attn_type="none",
+    ssm_type="rwkv6",
+    supports_long_context=True,
+)

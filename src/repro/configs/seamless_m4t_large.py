@@ -1,0 +1,20 @@
+"""seamless-m4t-large-v2 — encoder-decoder, multimodal (audio)
+[arXiv:2308.11596; hf]. 24 encoder + 24 decoder layers, d1024 16H MHA,
+d_ff 8192, vocab 256206. The speech frontend is a STUB: input_specs()
+provides precomputed filterbank-frame embeddings for the encoder."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,              # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab=256206,
+    is_encoder_decoder=True,
+    n_encoder_layers=24,
+    encoder_seq=1024,         # precomputed audio frames (stub frontend)
+)

@@ -1,0 +1,37 @@
+"""IMAC-Sim-JAX core: the paper's contribution as composable JAX modules.
+
+Public API:
+  devices.DeviceTech / MRAM / RRAM / CBRAM / PCM
+  interconnect.Interconnect
+  mapping.map_wb / map_network          (Module 2: mapWB)
+  partition.auto_partition / plan_partition / tile_matrix
+  solver.solve_crossbar / solve_dense_mna (the "SPICE engine")
+  neurons.NeuronModel
+  imac.IMACConfig / IMACNetwork / imac_linear (Modules 3-4)
+  netlist.map_layer / map_imac          (SPICE netlist generation)
+  evaluate.test_imac / sweep            (Module 1: testIMAC)
+"""
+from repro.core.devices import (  # noqa: F401
+    CBRAM,
+    MRAM,
+    PCM,
+    RRAM,
+    TECHNOLOGIES,
+    DeviceTech,
+    custom_tech,
+    get_tech,
+)
+from repro.core.evaluate import IMACResult, sweep, test_imac  # noqa: F401
+from repro.core.imac import IMACConfig, IMACNetwork, imac_linear  # noqa: F401
+from repro.core.interconnect import DEFAULT_INTERCONNECT, Interconnect  # noqa: F401
+from repro.core.mapping import MappedLayer, map_network, map_wb  # noqa: F401
+from repro.core.netlist import map_imac, map_layer, netlist_stats  # noqa: F401
+from repro.core.neurons import NeuronModel, get_neuron  # noqa: F401
+from repro.core.partition import PartitionPlan, auto_partition, plan_partition  # noqa: F401
+from repro.core.solver import (  # noqa: F401
+    CircuitParams,
+    crossbar_power,
+    solve_crossbar,
+    solve_dense_mna,
+    solve_ideal,
+)

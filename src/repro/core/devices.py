@@ -1,0 +1,105 @@
+"""Memristive device technologies for IMAC crossbars.
+
+Mirrors IMAC-Sim's "Synaptic Technology [R_low, R_high]" hyperparameter
+(Table I) and the four technologies of Table IV. A device is programmed to
+a conductance G ∈ [G_off, G_on] = [1/R_high, 1/R_low]; real devices have a
+finite number of programmable levels and cycle-to-cycle / device-to-device
+variation, both modelled here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTech:
+    """A memristive synaptic technology.
+
+    Attributes:
+      name: human-readable technology name.
+      r_low: low (ON) resistance in ohms -> G_on = 1/r_low.
+      r_high: high (OFF) resistance in ohms -> G_off = 1/r_high.
+      levels: number of programmable conductance levels (0 = continuous).
+      sigma_rel: relative lognormal programming variation (0 = none).
+      read_noise_rel: relative Gaussian read-current noise per access.
+    """
+
+    name: str
+    r_low: float
+    r_high: float
+    levels: int = 0
+    sigma_rel: float = 0.0
+    read_noise_rel: float = 0.0
+
+    @property
+    def g_on(self) -> float:
+        return 1.0 / self.r_low
+
+    @property
+    def g_off(self) -> float:
+        return 1.0 / self.r_high
+
+    @property
+    def g_range(self) -> float:
+        return self.g_on - self.g_off
+
+    @property
+    def on_off_ratio(self) -> float:
+        return self.r_high / self.r_low
+
+    def quantize(self, g: jax.Array) -> jax.Array:
+        """Snap conductances to the device's programmable levels."""
+        g = jnp.clip(g, self.g_off, self.g_on)
+        if self.levels and self.levels > 1:
+            step = self.g_range / (self.levels - 1)
+            g = self.g_off + jnp.round((g - self.g_off) / step) * step
+        return g
+
+    def perturb(self, key: jax.Array, g: jax.Array) -> jax.Array:
+        """Apply lognormal device-to-device programming variation."""
+        if self.sigma_rel <= 0.0:
+            return g
+        noise = jax.random.normal(key, g.shape, dtype=g.dtype)
+        return jnp.clip(
+            g * jnp.exp(self.sigma_rel * noise), self.g_off, self.g_on
+        )
+
+
+# Table IV of the paper -----------------------------------------------------
+MRAM = DeviceTech("MRAM", r_low=8.5e3, r_high=25.5e3)    # ref [4]
+RRAM = DeviceTech("RRAM", r_low=2.5e3, r_high=100e3)     # ref [5]
+CBRAM = DeviceTech("CBRAM", r_low=5e3, r_high=1e6)       # ref [6]
+PCM = DeviceTech("PCM", r_low=50e3, r_high=1e6)          # ref [7]
+
+TECHNOLOGIES: dict[str, DeviceTech] = {
+    t.name: t for t in (MRAM, RRAM, CBRAM, PCM)
+}
+
+
+def get_tech(name_or_tech: "str | DeviceTech") -> DeviceTech:
+    if isinstance(name_or_tech, DeviceTech):
+        return name_or_tech
+    try:
+        return TECHNOLOGIES[name_or_tech.upper()]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown device technology {name_or_tech!r}; "
+            f"known: {sorted(TECHNOLOGIES)}"
+        ) from e
+
+
+def custom_tech(
+    r_low: float,
+    r_high: float,
+    name: str = "custom",
+    levels: int = 0,
+    sigma_rel: float = 0.0,
+    read_noise_rel: float = 0.0,
+) -> DeviceTech:
+    if not (0.0 < r_low < r_high):
+        raise ValueError(f"need 0 < r_low < r_high, got {r_low}, {r_high}")
+    return DeviceTech(name, r_low, r_high, levels, sigma_rel, read_noise_rel)

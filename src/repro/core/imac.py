@@ -1,0 +1,286 @@
+"""Composable IMAC circuit modules: IMACLinear / IMACNetwork.
+
+This is the JAX-native equivalent of IMAC-Sim's mapLayer/mapIMAC: each DNN
+layer becomes a set of partitioned crossbar tiles (differential G+/G-
+arrays), solved with the batched circuit solver, followed by the
+behavioural differential-amp + neuron. Power and latency are extracted
+from the solved node voltages per Algorithm 1.
+
+Fast paths:
+  * parasitics=True  — full circuit solve (the paper's simulation).
+  * parasitics=False — ideal analog MVM (quantisation/variation/noise only),
+    optionally through the Pallas `imac_mvm` kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.devices import DeviceTech, get_tech
+from repro.core.interconnect import DEFAULT_INTERCONNECT, Interconnect
+from repro.core.mapping import MappedLayer, map_network
+from repro.core.neurons import NeuronModel, get_neuron
+from repro.core.partition import (
+    PartitionPlan,
+    auto_partition,
+    combine_outputs,
+    plan_partition,
+    tile_inputs,
+    tile_matrix,
+)
+from repro.core.solver import (
+    CircuitParams,
+    CrossbarSolution,
+    TridiagFn,
+    crossbar_power,
+    solve_crossbar,
+    solve_ideal,
+    suggest_iters,
+    tridiag_scan,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class IMACConfig:
+    """User-facing hyperparameters (paper Table I)."""
+
+    tech: DeviceTech | str = "MRAM"
+    neuron: NeuronModel | str = "sigmoid"
+    interconnect: Interconnect = DEFAULT_INTERCONNECT
+    array_rows: int = 32
+    array_cols: int = 32
+    hp: Optional[Sequence[int]] = None   # horizontal partitions per layer
+    vp: Optional[Sequence[int]] = None   # vertical partitions per layer
+    vdd: float = 0.8
+    vss: float = -0.8
+    r_source: float = 100.0
+    r_tia: float = 10.0
+    parasitics: bool = True
+    quantize: bool = True
+    gs_iters: Optional[int] = None       # None = suggest from tile size
+    sor_omega: float = 1.8
+    gs_tol: float = 1e-6                 # early-exit sweep tolerance (V)
+    t_sampling: float = 20e-9            # Table II: 20ns (printed as 20nm)
+    dtype: jnp.dtype = jnp.float32
+
+    def resolved_tech(self) -> DeviceTech:
+        return get_tech(self.tech)
+
+    def resolved_neuron(self) -> NeuronModel:
+        n = get_neuron(self.neuron)
+        if n.vdd != self.vdd or n.vss != self.vss:
+            n = dataclasses.replace(n, vdd=self.vdd, vss=self.vss)
+        return n
+
+    def circuit_params(self, rows: int, cols: int) -> CircuitParams:
+        iters = self.gs_iters or suggest_iters(rows, cols)
+        return CircuitParams(
+            r_row=self.interconnect.r_segment,
+            r_col=self.interconnect.r_segment,
+            r_source=self.r_source,
+            r_tia=self.r_tia,
+            gs_iters=iters,
+            omega=self.sor_omega,
+            tol=self.gs_tol,
+        )
+
+
+class LayerStats(NamedTuple):
+    power: jax.Array       # (batch,) total layer power (W)
+    latency: jax.Array     # scalar, settling latency estimate (s)
+    residual: jax.Array    # worst GS residual across tiles
+    z: jax.Array           # (batch, fan_out) recovered pre-activations
+
+
+class IMACLayerOutput(NamedTuple):
+    activations: jax.Array
+    stats: LayerStats
+
+
+def build_plans(
+    topology: Sequence[int], cfg: IMACConfig
+) -> "list[PartitionPlan]":
+    n_layers = len(topology) - 1
+    hp, vp = cfg.hp, cfg.vp
+    if hp is None or vp is None:
+        pairs = [
+            auto_partition(topology[i], topology[i + 1], cfg.array_rows, cfg.array_cols)
+            for i in range(n_layers)
+        ]
+        hp = [p[0] for p in pairs]
+        vp = [p[1] for p in pairs]
+    return [
+        plan_partition(topology[i], topology[i + 1], hp[i], vp[i])
+        for i in range(n_layers)
+    ]
+
+
+def imac_linear(
+    mapped: MappedLayer,
+    plan: PartitionPlan,
+    a: jax.Array,
+    cfg: IMACConfig,
+    *,
+    is_output: bool = False,
+    tridiag: TridiagFn = tridiag_scan,
+    noise_key: Optional[jax.Array] = None,
+) -> IMACLayerOutput:
+    """One analog layer: crossbar solve + diff amp + neuron.
+
+    Args:
+      mapped: differential conductances (bias row folded).
+      plan: tiling over (hp, vp) partitions.
+      a: (batch, fan_in) activations in digital units.
+      cfg: circuit hyperparameters.
+      is_output: last layer — linear readout (no neuron nonlinearity).
+      tridiag: pluggable tridiagonal solver.
+      noise_key: optional key for read noise on the output currents.
+
+    Returns:
+      activations (batch, fan_out) and per-layer circuit stats.
+    """
+    tech = cfg.resolved_tech()
+    neuron = cfg.resolved_neuron()
+    dtype = cfg.dtype
+    v_unit = mapped.v_unit
+    batch = a.shape[0]
+
+    # Bias input: driven at v_unit (logical activation 1).
+    ones = jnp.ones((batch, 1), dtype)
+    v = jnp.concatenate([a.astype(dtype), ones], axis=-1) * v_unit
+
+    if not cfg.parasitics:
+        g_diff = mapped.g_diff.astype(dtype)
+        i_diff = jnp.einsum("mn,bm->bn", g_diff, v)
+        p_dev = jnp.einsum("mn,bm->b", mapped.g_pos + mapped.g_neg, v**2)
+        residual = jnp.zeros((), dtype)
+        row_segs, col_segs = plan.cols, plan.rows
+    else:
+        tiles_p = tile_matrix(mapped.g_pos.astype(dtype), plan)
+        tiles_n = tile_matrix(mapped.g_neg.astype(dtype), plan)
+        g_all = jnp.concatenate([tiles_p, tiles_n], axis=0)  # (2T, M, N)
+        v_tiles = tile_inputs(v, plan)                        # (batch, hp, M)
+        # tile t = h*vp + vcol shares the h-th input slice.
+        v_per_tile = jnp.repeat(v_tiles, plan.vp, axis=1)     # (batch, T, M)
+        v_all = jnp.concatenate([v_per_tile, v_per_tile], axis=1)  # (batch, 2T, M)
+        cp = cfg.circuit_params(plan.rows, plan.cols)
+        sol = solve_crossbar(g_all[None], v_all, cp, tridiag=tridiag)
+        t = plan.n_tiles
+        i_pos = combine_outputs(sol.i_out[:, :t, :], plan)
+        i_neg = combine_outputs(sol.i_out[:, t:, :], plan)
+        i_diff = i_pos - i_neg
+        p_dev = crossbar_power(g_all[None], v_all, sol, cp).sum(axis=-1)
+        residual = jnp.max(sol.residual)
+        row_segs, col_segs = plan.cols, plan.rows
+
+    if noise_key is not None and tech.read_noise_rel > 0.0:
+        scale = tech.read_noise_rel * jnp.maximum(jnp.abs(i_diff), 1e-12)
+        i_diff = i_diff + scale * jax.random.normal(
+            noise_key, i_diff.shape, dtype
+        )
+
+    # Differential sense: recover digital pre-activation.
+    z = i_diff / (mapped.k * v_unit)
+    z = neuron.clip_preactivation(z)
+    act = z if is_output else neuron.activation(z)
+
+    # Interface power: one TIA+amp per tile column, one neuron per output.
+    n_amps = plan.hp * plan.vp * plan.cols * 2  # differential pair sensing
+    n_neurons = plan.total_cols
+    p_iface = n_amps * neuron.p_amp + n_neurons * neuron.p_neuron
+    power = p_dev + p_iface
+
+    # Latency: Elmore of row+column lines (1% settling ~ 4.6 tau) + neuron.
+    ic = cfg.interconnect
+    t_line = 4.6 * (ic.elmore_delay(row_segs) + ic.elmore_delay(col_segs))
+    latency = jnp.asarray(t_line + neuron.t_settle, dtype)
+
+    return IMACLayerOutput(
+        activations=act,
+        stats=LayerStats(power=power, latency=latency, residual=residual, z=z),
+    )
+
+
+class IMACNetwork:
+    """The full mapped network (mapIMAC): layers + plans + forward.
+
+    Construction performs mapWB (Module 2) and partition planning
+    (Module 3's tiling); `__call__` simulates the concatenated circuit
+    (Module 4 + Algorithm 1's SPICE run), returning outputs and stats.
+    """
+
+    def __init__(
+        self,
+        params: "list[tuple[jax.Array, jax.Array]]",
+        cfg: IMACConfig,
+        *,
+        variation_key: Optional[jax.Array] = None,
+    ):
+        self.cfg = cfg
+        tech = cfg.resolved_tech()
+        topology = [params[0][0].shape[0]] + [w.shape[1] for w, _ in params]
+        self.topology = topology
+        self.mapped = map_network(
+            params,
+            tech,
+            v_unit=cfg.vdd,
+            quantize=cfg.quantize,
+            variation_key=variation_key,
+        )
+        self.plans = build_plans(topology, cfg)
+
+    @property
+    def hp(self) -> "list[int]":
+        return [p.hp for p in self.plans]
+
+    @property
+    def vp(self) -> "list[int]":
+        return [p.vp for p in self.plans]
+
+    def __call__(
+        self,
+        x: jax.Array,
+        *,
+        tridiag: TridiagFn = tridiag_scan,
+        noise_key: Optional[jax.Array] = None,
+    ) -> "tuple[jax.Array, list[LayerStats]]":
+        """Simulate the full IMAC circuit for a batch of inputs.
+
+        Args:
+          x: (batch, n_inputs) in digital activation units ([0,1] for
+            sigmoid networks).
+
+        Returns:
+          (batch, n_outputs) final pre-activations (linear readout) and
+          per-layer stats.
+        """
+        a = x
+        stats: list[LayerStats] = []
+        n = len(self.mapped)
+        keys = (
+            jax.random.split(noise_key, n) if noise_key is not None else [None] * n
+        )
+        for idx, (mapped, plan) in enumerate(zip(self.mapped, self.plans)):
+            out = imac_linear(
+                mapped,
+                plan,
+                a,
+                self.cfg,
+                is_output=(idx == n - 1),
+                tridiag=tridiag,
+                noise_key=keys[idx],
+            )
+            a = out.activations
+            stats.append(out.stats)
+        return a, stats
+
+    def total_power(self, stats: "list[LayerStats]") -> jax.Array:
+        """Mean-over-batch total circuit power (W)."""
+        return sum(jnp.mean(s.power) for s in stats)
+
+    def total_latency(self, stats: "list[LayerStats]") -> jax.Array:
+        """End-to-end settling latency + sampling time (s)."""
+        return sum(s.latency for s in stats) + self.cfg.t_sampling

@@ -1,0 +1,1 @@
+from repro.data.digits import make_digits  # noqa: F401

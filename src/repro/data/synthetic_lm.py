@@ -1,0 +1,154 @@
+"""Deterministic synthetic LM token pipeline.
+
+Generates a Zipf-distributed Markov-ish token stream so models have real
+structure to learn (synthetic perplexity decreases measurably within a
+few hundred steps of the example driver). Sharded per host: each data
+shard draws a disjoint counter-based PRNG stream (restart-safe: the
+stream is a pure function of (seed, shard, step)), with background
+prefetch overlapping host generation with device compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    batch_size: int          # per-process batch
+    seed: int = 0
+    shard: int = 0
+    n_shards: int = 1
+    zipf_a: float = 1.3      # skewed unigram distribution
+    run_len: int = 4         # deterministic successor-chain run length
+
+
+class SyntheticLM:
+    """Restart-safe synthetic token stream (pure function of step).
+
+    Tokens are Zipf-sampled run anchors followed by run_len-1 steps of a
+    fixed random permutation ("successor") — so within a run the next
+    token is a deterministic function of the current one. A model that
+    learns the permutation reaches (run_len-1)/run_len next-token
+    accuracy; perplexity drops measurably within a few hundred steps.
+    """
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.successor = rng.permutation(cfg.vocab).astype(np.int32)
+        # Powers of the permutation up to run_len for vectorised chains.
+        powers = [np.arange(cfg.vocab, dtype=np.int32)]
+        for _ in range(cfg.run_len - 1):
+            powers.append(self.successor[powers[-1]])
+        self.succ_pow = np.stack(powers)  # (run_len, vocab)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        probs = ranks ** (-cfg.zipf_a)
+        self.unigram = (probs / probs.sum()).astype(np.float64)
+
+    def batch_at(self, step: int) -> "dict[str, np.ndarray]":
+        cfg = self.cfg
+        ss = np.random.SeedSequence(
+            entropy=cfg.seed, spawn_key=(cfg.shard, step)
+        )
+        rng = np.random.default_rng(ss)
+        b, s = cfg.batch_size, cfg.seq_len
+        r = cfg.run_len
+        n_runs = (s + 1 + r - 1) // r
+        anchors = rng.choice(
+            cfg.vocab, size=(b, n_runs), p=self.unigram
+        ).astype(np.int32)
+        t = np.arange(n_runs * r)
+        toks = self.succ_pow[t % r, anchors[:, t // r]][:, : s + 1]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator["dict[str, np.ndarray]"]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def multimodal_extras(
+    cfg: ModelConfig, batch_size: int, step: int, seed: int = 0
+) -> "dict[str, np.ndarray]":
+    """Stub frontend tensors for vlm/audio archs (assignment: precomputed
+    patch/frame embeddings)."""
+    rng = np.random.default_rng(np.random.SeedSequence(seed, spawn_key=(99, step)))
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = rng.standard_normal(
+            (batch_size, cfg.modality_prefix, cfg.d_model), dtype=np.float32
+        )
+    if cfg.is_encoder_decoder:
+        extras["frames"] = rng.standard_normal(
+            (batch_size, cfg.encoder_seq, cfg.d_model), dtype=np.float32
+        )
+    return extras
+
+
+class Prefetcher:
+    """Background-thread prefetch queue over a batch-producing callable."""
+
+    def __init__(self, produce, depth: int = 2, start_step: int = 0):
+        self._produce = produce
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        while not self._stop.is_set():
+            batch = self._produce(self._step)
+            self._step += 1
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def get(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)
+
+
+def make_train_stream(
+    model_cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    per_process_batch: Optional[int] = None,
+    seed: int = 0,
+    start_step: int = 0,
+    prefetch: int = 2,
+):
+    """Prefetching stream of train batches for (arch, shape)."""
+    b = per_process_batch or shape.global_batch
+    lm = SyntheticLM(
+        DataConfig(vocab=model_cfg.vocab, seq_len=shape.seq_len, batch_size=b, seed=seed)
+    )
+
+    def produce(step):
+        batch = lm.batch_at(step)
+        batch.update(multimodal_extras(model_cfg, b, step, seed))
+        return batch
+
+    return Prefetcher(produce, depth=prefetch, start_step=start_step)

@@ -1,0 +1,6 @@
+from repro.distributed.compression import (  # noqa: F401
+    CompressionState,
+    compressed_allreduce,
+    ef_state_init,
+)
+from repro.distributed.overlap import ring_allgather_matmul  # noqa: F401

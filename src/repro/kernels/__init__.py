@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for IMAC-Sim-JAX's compute hot-spots.
+
+  tridiag          — batched Thomas solve, the inner loop of the crossbar
+                     circuit solver (lanes = independent systems).
+  imac_mvm         — fused quantised differential analog MVM (the
+                     ideal-analog fast path / AnalogLinear backend).
+  decode_attention — flash-decoding (online softmax over KV blocks) for
+                     long-context serving shapes.
+
+Each kernel directory has kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper choosing interpret mode off-TPU) and
+ref.py (pure-jnp oracle used by the tests).
+"""
+from repro.kernels.tridiag.ops import tridiag  # noqa: F401
+from repro.kernels.imac_mvm.ops import imac_mvm  # noqa: F401
+from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401

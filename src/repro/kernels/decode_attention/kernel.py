@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: flash-decoding (one query token vs a long KV cache).
+
+Decode attention is memory-bound: the whole KV cache streams HBM->VMEM
+once per step. The kernel tiles the cache into (bs, D) blocks along the
+sequence, keeps online-softmax state (m, l, acc) in VMEM scratch that
+persists across the sequential S-grid dimension, and writes the output on
+the last block — one pass, no (S,) intermediates in HBM.
+
+Layout: one grid row per (batch, kv_head); the G = H/Hkv grouped query
+heads form the sublane dim of a (G, Dk) q tile, so GQA groups share the
+streamed KV block (this is what makes GQA decode G× more
+bandwidth-efficient, and it falls out of the tiling). Variable cache
+lengths come in via scalar prefetch and mask the tail block.
+
+Dk (score) and Dv (value) may differ — MLA absorbed decode uses
+Dk=kv_lora+rope, Dv=kv_lora on a single shared KV head (MQA-like).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bs, n_s, scale
+):
+    i = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (G, Dk)
+    k = k_ref[0].astype(jnp.float32)          # (bs, Dk)
+    v = v_ref[0].astype(jnp.float32)          # (bs, Dv)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (G, bs)
+
+    kv_len = len_ref[i]
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos < kv_len, scores, NEG_INF)
+
+    m_prev = m_ref[...]                        # (G, 1)
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                # (G, bs)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "scale", "interpret"))
+def decode_attention_flat(
+    q: jax.Array,       # (BN, G, Dk)
+    k: jax.Array,       # (BN, S, Dk)
+    v: jax.Array,       # (BN, S, Dv)
+    lengths: jax.Array,  # (BN,) int32 valid cache lengths
+    *,
+    bs: int = 512,
+    scale: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    bn, g, dk = q.shape
+    _, s, dv = v.shape
+    assert s % bs == 0, f"S={s} must be a multiple of block {bs}"
+    n_s = s // bs
+    grid = (bn, n_s)
+    kernel = functools.partial(_decode_kernel, bs=bs, n_s=n_s, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, g, dk), lambda i, s_, lens: (i, 0, 0)),
+                pl.BlockSpec((1, bs, dk), lambda i, s_, lens: (i, s_, 0)),
+                pl.BlockSpec((1, bs, dv), lambda i, s_, lens: (i, s_, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, g, dv), lambda i, s_, lens: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bn, g, dv), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,55 @@
+"""Public wrapper: GQA-layout flash-decoding attention.
+
+Reshapes (B, H, Dk) x (B, S, Hkv, D*) into per-(batch, kv-head) rows for
+the kernel, broadcasts cache lengths, and picks interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_flat
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "scale", "interpret"))
+def decode_attention(
+    q: jax.Array,                      # (B, H, Dk)
+    k: jax.Array,                      # (B, S, Hkv, Dk)
+    v: jax.Array,                      # (B, S, Hkv, Dv)
+    kv_len: Optional[jax.Array] = None,  # (B,) int32
+    *,
+    bs: int = 512,
+    scale: Optional[float] = None,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """Single-step decode attention with online softmax over KV blocks."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, dk = q.shape
+    _, s, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // hkv
+    if scale is None:
+        scale = dk ** -0.5
+    if kv_len is None:
+        kv_len = jnp.full((b,), s, jnp.int32)
+
+    bs_eff = min(bs, s)
+    while s % bs_eff:
+        bs_eff //= 2
+
+    qf = q.reshape(b, hkv, g, dk).reshape(b * hkv, g, dk)
+    kf = jnp.swapaxes(k, 1, 2).reshape(b * hkv, s, dk)
+    vf = jnp.swapaxes(v, 1, 2).reshape(b * hkv, s, dv)
+    lens = jnp.repeat(kv_len.astype(jnp.int32), hkv)
+    out = decode_attention_flat(
+        qf, kf, vf, lens, bs=bs_eff, scale=float(scale), interpret=interpret
+    )
+    return out.reshape(b, hkv, g, dv).reshape(b, h, dv)
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash-decoding attention (single query step).
+
+GQA layout: q (B, H, Dk), k (B, S, Hkv, Dk), v (B, S, Hkv, Dv) with
+H = G * Hkv. `kv_len` masks the valid cache prefix per batch element.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_len: Optional[jax.Array] = None,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, h, dk = q.shape
+    _, s, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // hkv
+    if scale is None:
+        scale = dk ** -0.5
+    qf = q.reshape(b, hkv, g, dk).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bngd,bsnd->bngs", qf, kf) * scale
+    if kv_len is not None:
+        mask = jnp.arange(s)[None, :] < kv_len[:, None]  # (B, S)
+        scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngs,bsnd->bngd", p, vf)
+    return out.reshape(b, h, dv).astype(q.dtype)

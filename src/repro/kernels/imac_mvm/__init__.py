@@ -1,0 +1,1 @@
+from repro.kernels.imac_mvm.ops import imac_mvm  # noqa: F401

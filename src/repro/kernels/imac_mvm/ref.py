@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused quantised differential analog MVM.
+
+Semantics (normalised units; ops.py maps device physics onto these):
+  * inputs x in [0, 1] are DAC-quantised to 2^dac_bits uniform levels,
+  * weights w in [-1, 1] are programmed as a differential conductance
+    pair, each side on `levels` uniform levels in [0, 1]; the effective
+    quantised weight is sign(w) * Q_levels(|w|),
+  * y = DAC(x) @ Q(w).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dac_quant(x: jax.Array, dac_bits: int) -> jax.Array:
+    if dac_bits <= 0:
+        return jnp.clip(x, 0.0, 1.0)
+    n = (1 << dac_bits) - 1
+    return jnp.round(jnp.clip(x, 0.0, 1.0) * n) / n
+
+
+def weight_quant(w: jax.Array, levels: int) -> jax.Array:
+    w = jnp.clip(w, -1.0, 1.0)
+    if levels <= 1:
+        return w
+    step = 1.0 / (levels - 1)
+    return jnp.sign(w) * jnp.round(jnp.abs(w) / step) * step
+
+
+def imac_mvm_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    dac_bits: int = 8,
+    levels: int = 16,
+) -> jax.Array:
+    """x: (B, K) in [0,1]; w: (K, N) in [-1,1] -> (B, N) float32."""
+    xq = dac_quant(x.astype(jnp.float32), dac_bits)
+    wq = weight_quant(w.astype(jnp.float32), levels)
+    return xq @ wq

@@ -1,0 +1,1 @@
+from repro.kernels.tridiag.ops import tridiag  # noqa: F401

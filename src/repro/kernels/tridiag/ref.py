@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the batched tridiagonal (Thomas) solve."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tridiag_ref(dl: jax.Array, d: jax.Array, du: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve tridiagonal systems along the last axis.
+
+    dl[..., 0] and du[..., -1] are ignored. Shapes all (..., N).
+    """
+    n = d.shape[-1]
+    if n == 1:
+        return b / d
+    dl_t = jnp.moveaxis(dl, -1, 0)
+    d_t = jnp.moveaxis(d, -1, 0)
+    du_t = jnp.moveaxis(du, -1, 0)
+    b_t = jnp.moveaxis(b, -1, 0)
+
+    def fwd(carry, row):
+        cp_prev, dp_prev = carry
+        dl_j, d_j, du_j, b_j = row
+        denom = d_j - dl_j * cp_prev
+        cp = du_j / denom
+        dp = (b_j - dl_j * dp_prev) / denom
+        return (cp, dp), (cp, dp)
+
+    zeros = jnp.zeros_like(d_t[0])
+    dl_eff = dl_t.at[0].set(0.0)
+    _, (cp, dp) = jax.lax.scan(fwd, (zeros, zeros), (dl_eff, d_t, du_t, b_t))
+
+    def bwd(x_next, row):
+        cp_j, dp_j = row
+        x_j = dp_j - cp_j * x_next
+        return x_j, x_j
+
+    _, x_rev = jax.lax.scan(bwd, zeros, (cp, dp), reverse=True)
+    return jnp.moveaxis(x_rev, 0, -1)

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# backend init, and the production meshes below need 512 host devices.
+
+import argparse          # noqa: E402
+import functools         # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_config          # noqa: E402
+from repro.configs.base import ModelConfig, ShapeConfig      # noqa: E402
+from repro.launch.hlo_analysis import collective_stats, compute_stats  # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.specs import cell_supported, input_specs   # noqa: E402
+from repro.models import build_model                         # noqa: E402
+from repro.optim import AdamWConfig, adamw_init              # noqa: E402
+from repro.optim.schedule import constant_schedule           # noqa: E402
+from repro.sharding.rules import DEFAULT_RULES, spec_tree    # noqa: E402
+from repro.train.loop import (                               # noqa: E402
+    TrainConfig,
+    batch_specs,
+    make_train_step,
+    opt_shardings,
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell
+from ShapeDtypeStructs only, and record memory / cost / collective
+analysis for §Dry-run and §Roofline of EXPERIMENTS.md.
+
+Run:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+
+# v5e hardware constants for the roofline report.
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (≈ per chip usable)
+
+
+def _adamw_for(cfg: ModelConfig) -> AdamWConfig:
+    # bf16-param (huge MoE) archs use 8-bit moments; dense use fp32.
+    bits = 8 if cfg.param_dtype == "bfloat16" else 32
+    return AdamWConfig(state_bits=bits)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rules=DEFAULT_RULES,
+):
+    """Lower + compile one cell; returns (compiled, meta dict)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return None, {"skipped": True, "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if cfg.fsdp_over_pod and multi_pod:
+        rules = rules.extend({"embed": (("pod", "data"), ("data",), None)})
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(model.init, key)
+    p_shard = spec_tree(model.param_axes(), params_s, mesh, rules)
+    batch = input_specs(cfg, shape)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatches=1, adamw=_adamw_for(cfg))
+        step = make_train_step(model, tcfg, constant_schedule(3e-4))
+        opt_s = jax.eval_shape(
+            functools.partial(adamw_init, cfg=tcfg.adamw), params_s
+        )
+        o_shard = opt_shardings(opt_s, p_shard, mesh, rules)
+        b_shard = batch_specs(batch, mesh, rules)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard, None),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(
+                params_s, opt_s, batch, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+    elif shape.kind == "prefill":
+        fn = functools.partial(model.prefill, cache_len=shape.seq_len)
+        b_shard = batch_specs(batch, mesh, rules)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+        with mesh:
+            lowered = jitted.lower(params_s, batch)
+    else:  # decode
+        cache_s = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        c_shard = spec_tree(model.cache_axes(), cache_s, mesh, rules)
+        b_shard = batch_specs(batch, mesh, rules)
+        jitted = jax.jit(
+            model.decode_step,
+            in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(params_s, cache_s, batch["tokens"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    meta = {
+        "skipped": False,
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+    }
+    return compiled, meta
+
+
+def analyse(compiled, meta: dict, cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Extract memory/cost/collective numbers + roofline terms."""
+    out = dict(meta)
+    try:
+        mem = compiled.memory_analysis()
+        out["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+        if hasattr(mem, "serialized_size_in_bytes"):
+            out["memory"]["serialized_size_in_bytes"] = int(
+                mem.serialized_size_in_bytes
+            )
+    except Exception as e:  # CPU backend may not implement it
+        out["memory"] = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        keep = ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+        out["cost"] = (
+            {k: float(cost[k]) for k in keep if k in cost} if cost else {}
+        )
+    except Exception as e:
+        out["cost"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    stats = collective_stats(hlo)
+    out["collectives"] = stats.to_dict()
+    out["hlo_bytes"] = len(hlo)
+    # Loop-multiplicity-aware HLO flops/bytes (XLA's cost analysis visits
+    # while bodies once, undercounting scanned models — see hlo_analysis).
+    parsed = compute_stats(hlo)
+    out["parsed"] = parsed
+
+    # Roofline terms (seconds; per device).
+    n_dev = meta["n_devices"]
+    flops = parsed["flops"] or out.get("cost", {}).get("flops", 0.0)
+    bytes_accessed = parsed["bytes"] or out.get("cost", {}).get(
+        "bytes accessed", 0.0
+    )
+    coll_bytes = stats.total_bytes
+    # train: 6ND over all B*S tokens (fwd+bwd); prefill: 2ND over B*S
+    # (fwd only); decode: 2ND over the B new tokens.
+    if shape.kind == "train":
+        model_flops = 6.0 * cfg.n_active_params() * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * cfg.n_active_params() * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * cfg.n_active_params() * shape.global_batch
+    out["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS if flops else None,
+        "memory_s": bytes_accessed / HBM_BW if bytes_accessed else None,
+        "collective_s": coll_bytes / ICI_BW if coll_bytes else 0.0,
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_dev,
+        "hlo_flops_per_device": flops,
+        "useful_flops_ratio": (model_flops / n_dev) / flops if flops else None,
+    }
+    terms = {
+        "compute": out["roofline"]["compute_s"] or 0.0,
+        "memory": out["roofline"]["memory_s"] or 0.0,
+        "collective": out["roofline"]["collective_s"] or 0.0,
+    }
+    out["roofline"]["dominant"] = max(terms, key=terms.get)
+    return out
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir="artifacts/dryrun", force=False):
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    try:
+        compiled, meta = lower_cell(arch, shape_name, multi_pod=multi_pod)
+        if compiled is None:
+            result = {
+                "arch": arch, "shape": shape_name, "mesh": mesh_tag, **meta
+            }
+        else:
+            result = analyse(compiled, meta, cfg, shape)
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: "
+                  f"compile={result['t_compile_s']}s "
+                  f"dominant={result['roofline']['dominant']}")
+            print("  memory_analysis:", result.get("memory"))
+            print("  cost_analysis:",
+                  {k: v for k, v in result.get("cost", {}).items()
+                   if k in ("flops", "bytes accessed")})
+            del compiled
+    except Exception as e:
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+            "skipped": False, "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: FAILED {e}")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument(
+        "--mesh", default="both", choices=["single", "multi", "both"]
+    )
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, out_dir=args.out, force=args.force)
+                if r.get("skipped"):
+                    n_skip += 1
+                elif "error" in r:
+                    n_fail += 1
+                else:
+                    n_ok += 1
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

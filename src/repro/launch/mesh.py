@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state — jax locks the device count on first
+backend initialisation, and only launch/dryrun.py (which sets XLA_FLAGS
+before any import) should ever see 512 placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips single pod, or 2 pods x 16 x 16 = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(n_devices: "int | None" = None):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

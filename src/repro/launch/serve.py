@@ -1,0 +1,70 @@
+"""Serving launcher: continuous-batching engine for --arch <id>.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --requests 6 --analog
+
+--analog routes FFN projections through the simulated IMAC crossbars
+(the paper's inference-accelerator mode).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--analog", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        cfg = dataclasses.replace(
+            cfg, param_dtype="float32", compute_dtype="float32"
+        )
+    if args.analog:
+        cfg = dataclasses.replace(cfg, analog_mvm=True)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(
+        model, params, ServeConfig(slots=args.slots, cache_len=args.cache_len)
+    )
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, size=(8 + i % 5,)),
+            max_tokens=args.max_tokens,
+        )
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    eng.run(reqs, max_ticks=10_000)
+    dt = time.time() - t0
+    n_tok = sum(len(r.output) for r in reqs)
+    for r in reqs:
+        print(f"[serve] req {r.rid}: {len(r.output)} tokens "
+              f"{'done' if r.done else 'INCOMPLETE'}")
+    print(f"[serve] {n_tok} tokens in {dt:.1f}s "
+          f"({n_tok/dt:.1f} tok/s, slots={args.slots}, "
+          f"analog={'on' if args.analog else 'off'})")
+
+
+if __name__ == "__main__":
+    main()

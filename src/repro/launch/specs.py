@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers
+against these. Modality frontends are stubs per the assignment:
+`input_specs` hands the model precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import dtype_of
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    cdt = dtype_of(cfg.compute_dtype)
+    text = s - (cfg.modality_prefix if cfg.family == "vlm" else 0)
+    specs = {
+        "tokens": sds((b, text), jnp.int32),
+        "labels": sds((b, text), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = sds((b, cfg.modality_prefix, cfg.d_model), cdt)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), cdt)
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return sds((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """The model inputs lowered for this cell (excludes params/opt/cache,
+    which come from jax.eval_shape over init functions)."""
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    if shape.kind == "decode":
+        return {"tokens": decode_token_specs(cfg, shape)}
+    raise ValueError(shape.kind)
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> "tuple[bool, str]":
+    """Assignment skip rules (documented in DESIGN.md §6)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "pure full-attention arch: 524288-token dense-KV decode needs "
+            "sub-quadratic attention (run for ssm/hybrid archs only)"
+        )
+    return True, ""

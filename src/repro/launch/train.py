@@ -1,0 +1,90 @@
+"""Training launcher: --arch <id> --shape <name> on the current device
+pool (production pods use the same entry point; this container runs the
+reduced config on 1 CPU device).
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 50 \
+      --reduced --ckpt-dir artifacts/ckpt
+
+On a real multi-host pod, initialise jax.distributed first (the launcher
+does it when JAX_COORDINATOR is set) and drop --reduced; the mesh comes
+from launch/mesh.py and params/opt shard per sharding/rules.py. On
+restart after preemption or failure the latest committed checkpoint is
+picked up automatically; persistent stragglers raise after an emergency
+checkpoint so the orchestrator can re-mesh (train/fault.plan_mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic_lm import make_train_stream
+from repro.launch.mesh import make_dev_mesh, make_production_mesh
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config + shape (CPU)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--schedule", default="wsd",
+                    choices=["wsd", "cosine", "constant"])
+    ap.add_argument("--peak-lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 production mesh (needs 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()  # multi-host pod entry
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if args.reduced:
+        cfg = cfg.reduced()
+        shape = ShapeConfig(shape.name, 128, 4, shape.kind)
+    model = build_model(cfg)
+    print(f"[train] {cfg.name} x {shape.name}: ~{cfg.n_params()/1e6:.1f}M params")
+
+    mesh = None
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif len(jax.devices()) > 1:
+        mesh = make_dev_mesh()
+
+    bits = 8 if cfg.param_dtype == "bfloat16" else 32
+    tcfg = TrainConfig(
+        peak_lr=args.peak_lr,
+        total_steps=args.steps,
+        schedule=args.schedule,
+        microbatches=args.microbatches,
+        adamw=AdamWConfig(state_bits=bits),
+        checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=max(10, args.steps // 5),
+        log_every=10,
+    )
+    trainer = Trainer(model, tcfg, mesh=mesh)
+    trainer.install_preemption_hook()
+    stream = make_train_stream(cfg, shape, seed=0)
+
+    def log(step, m):
+        print(f"[train] step {step:5d} loss {m['loss']:.4f} lr {m['lr']:.2e}")
+
+    params, history = trainer.fit(jax.random.PRNGKey(0), stream, on_metrics=log)
+    stream.close()
+    print(f"[train] done; final loss {history[-1][1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,353 @@
+"""Attention: GQA (+RoPE) and MLA (DeepSeek), train/prefill/decode paths.
+
+Sharding: query heads shard over the model axis when divisible; otherwise
+the resolver falls back and the sequence dim carries the model axis
+(sequence-parallel attention with KV gathered by XLA). Decode caches are
+context-parallel: (batch->data, cache_seq->model), which XLA turns into
+flash-decoding-style partial softmax + combine. On real TPUs the serving
+engine swaps the decode einsum for kernels/decode_attention; the einsum
+path keeps the dry-run HLO clean on the CPU backend (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Builder, rope
+from repro.sharding.rules import attn_q_axes, shard_activation
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, S, KV, Dk)  [MLA: KV=1, Dk=kv_lora+rope]
+    v: jax.Array       # (B, S, KV, Dv)  [MLA: unused placeholder dims ok]
+    length: jax.Array  # (B,) int32 — tokens currently in the cache
+
+
+# ----------------------------------------------------------------- GQA
+
+
+def gqa_params(b: Builder, cfg: ModelConfig):
+    e, h, kv, d = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": b.param((e, h, d), ("embed", "heads", "head_dim")),
+        "wk": b.param((e, kv, d), ("embed", "kv_heads", "head_dim")),
+        "wv": b.param((e, kv, d), ("embed", "kv_heads", "head_dim")),
+        "wo": b.param((h, d, e), ("heads", "head_dim", "embed")),
+    }
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,H,D), k/v (B,Sk,KV,D'), mask: None | (q_pos, k_pos) lazy
+    causal pair | (B, Sk) boolean KV validity | (B, Sq, Sk) boolean.
+
+    The causal mask is folded into the select as broadcast iota
+    comparisons so no (B,Sq,Sk) buffer is materialised per head.
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, g, d)
+    scores = jnp.einsum("bqngd,bknd->bnqgk", qf, k.astype(jnp.float32)) * scale
+    if mask is not None:
+        if isinstance(mask, tuple):
+            q_pos, k_pos = mask  # lazy causal: (B,Sq), (B,Sk)
+            ok = q_pos[:, None, :, None, None] >= k_pos[:, None, None, None, :]
+        elif mask.ndim == 2:  # (B, Sk) validity
+            ok = mask[:, None, None, None, :]
+        else:  # (B, Sq, Sk)
+            ok = mask[:, None, :, None, :]
+        scores = jnp.where(ok, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnqgk,bknd->bqngd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+ATTN_CHUNK = 1024
+CHUNKED_ATTN = False  # opt-in; see gqa_apply note + EXPERIMENTS §Perf it.5
+
+
+def _sdpa_chunked(q, k, v, positions, scale, causal=True, chunk=ATTN_CHUNK):
+    """Online-softmax attention over KV chunks (flash-style in pure JAX).
+
+    Streams K/V in (chunk,)-blocks with running (m, l, acc) statistics,
+    so no (Sq, Sk) score tensor ever exists in HBM — per-chunk scores
+    live only inside the scan body (remat'd in backward). §Perf
+    iteration 5. Shapes as _sdpa; positions: (B, S) for causal masking.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    qf = q.astype(f32).reshape(b, sq, kvh, g, d)
+    n_chunks = sk // chunk
+
+    ks = jnp.moveaxis(k.reshape(b, n_chunks, chunk, kvh, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n_chunks, chunk, kvh, dv), 1, 0)
+    kpos = jnp.moveaxis(positions.reshape(b, n_chunks, chunk), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, kp = inp
+        s = jnp.einsum("bqngd,bknd->bnqgk", qf, k_c.astype(f32)) * scale
+        if causal:
+            ok = positions[:, None, :, None, None] >= kp[:, None, None, None, :]
+            s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(pexp, axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum(
+            "bnqgk,bknd->bnqgd", pexp, v_c.astype(f32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, sq, g), NEG_INF, f32)
+    l0 = jnp.zeros((b, kvh, sq, g), f32)
+    a0 = jnp.zeros((b, kvh, sq, g, dv), f32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (ks, vs, kpos)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def gqa_apply(
+    p,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    cache: Optional[KVCache] = None,
+    make_cache: bool = False,
+    cache_len: int = 0,
+    kv_override: Optional[tuple] = None,
+):
+    """Unified attention path.
+
+    Modes:
+      train:   cache=None, make_cache=False -> (out, None)
+      prefill: make_cache=True -> (out, KVCache) [cache_len = allocation]
+      decode:  cache=KVCache, x is (B, 1, E) -> (out, updated KVCache)
+      cross:   kv_override=(k_src, v_src, src_mask) from encoder output
+    """
+    b, s, e = x.shape
+    h, kvh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = d ** -0.5
+
+    q_axes = attn_q_axes(h)
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(x.dtype))
+    q = shard_activation(q, q_axes)
+
+    if kv_override is not None:
+        # Cross-attention: no RoPE, KV comes from the encoder output.
+        k_all, v_all, src_mask = kv_override
+        out = _sdpa(q, k_all, v_all, src_mask, scale)
+        new_cache = None
+    elif cache is None:
+        k = jnp.einsum("bse,ehd->bshd", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bse,ehd->bshd", x, p["wv"].astype(x.dtype))
+        if causal:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            q = shard_activation(q, q_axes)
+        k = shard_activation(k, ("act_batch", None, "act_kv_heads", None))
+        v = shard_activation(v, ("act_batch", None, "act_kv_heads", None))
+        # Chunked (flash-style) attention is opt-in: §Perf iteration 5
+        # measured it NEUTRAL-to-slightly-worse on the HBM-traffic metric
+        # once iterations 1-4 had removed the score-softmax passes from
+        # the critical set (the f32 online-softmax carries offset the
+        # saved passes); it still bounds *peak* score memory, so serving
+        # configs with very long prefills may enable it.
+        if CHUNKED_ATTN and s >= 2 * ATTN_CHUNK and s % ATTN_CHUNK == 0:
+            out = _sdpa_chunked(q, k, v, positions, scale, causal=causal)
+        else:
+            mask = (positions, positions) if causal else None
+            out = _sdpa(q, k, v, mask, scale)
+        out = shard_activation(out, q_axes)
+        new_cache = None
+        if make_cache:
+            pad = cache_len - s
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kc = shard_activation(kc, ("cache_batch", "cache_seq", None, None))
+            vc = shard_activation(vc, ("cache_batch", "cache_seq", None, None))
+            new_cache = KVCache(
+                k=kc, v=vc, length=jnp.full((b,), s, jnp.int32)
+            )
+    else:
+        # Decode: s == 1 new token at per-sequence position cache.length.
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = jnp.einsum("bse,ehd->bshd", x, p["wk"].astype(x.dtype))
+        v_new = jnp.einsum("bse,ehd->bshd", x, p["wv"].astype(x.dtype))
+        k_new = rope(k_new, positions, cfg.rope_theta)
+        bidx = jnp.arange(b)
+        kc = cache.k.at[bidx, cache.length].set(
+            k_new[:, 0].astype(cache.k.dtype)
+        )
+        vc = cache.v.at[bidx, cache.length].set(
+            v_new[:, 0].astype(cache.v.dtype)
+        )
+        kc = shard_activation(kc, ("cache_batch", "cache_seq", None, None))
+        vc = shard_activation(vc, ("cache_batch", "cache_seq", None, None))
+        new_len = cache.length + 1
+        s_cache = kc.shape[1]
+        kv_mask = (
+            jnp.arange(s_cache)[None, :] < new_len[:, None]
+        )  # (B, S_cache)
+        out = _sdpa(q, kc, vc, kv_mask, scale)
+        new_cache = KVCache(k=kc, v=vc, length=new_len)
+
+    out = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+    return shard_activation(out, ("act_batch", "act_seq", None)), new_cache
+
+
+# ----------------------------------------------------------------- MLA
+
+
+def mla_params(b: Builder, cfg: ModelConfig):
+    e, h = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    p = {
+        "w_dkv": b.param((e, kvl), ("embed", "kv_lora")),
+        "kv_norm": b.param((kvl,), ("norm",), init="ones"),
+        "w_kr": b.param((e, dr), ("embed", None)),
+        "w_uk": b.param((kvl, h, dn), ("kv_lora", "heads", "head_dim")),
+        "w_uv": b.param((kvl, h, dv), ("kv_lora", "heads", "head_dim")),
+        "w_o": b.param((h, dv, e), ("heads", "head_dim", "embed")),
+    }
+    if ql:
+        p["w_dq"] = b.param((e, ql), ("embed", "q_lora"))
+        p["q_norm"] = b.param((ql,), ("norm",), init="ones")
+        p["w_uq"] = b.param((ql, h, dn + dr), ("q_lora", "heads", "head_dim"))
+    else:
+        p["w_q"] = b.param((e, h, dn + dr), ("embed", "heads", "head_dim"))
+    return p
+
+
+def _mla_q(p, x, cfg):
+    from repro.models.common import rmsnorm
+
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bse,er->bsr", x, p["w_dq"].astype(x.dtype))
+        cq = rmsnorm({"scale": p["q_norm"]}, cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhd->bshd", cq, p["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bse,ehd->bshd", x, p["w_q"].astype(x.dtype))
+    return q[..., :dn], q[..., dn:]  # nope, rope parts
+
+
+def mla_apply(
+    p,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    cache: Optional[KVCache] = None,
+    make_cache: bool = False,
+    cache_len: int = 0,
+    kv_override=None,
+):
+    """MLA attention. Cache stores the compressed (c_kv | k_rope) stream
+    as a single-"head" KV (MQA-like); decode uses weight absorption."""
+    from repro.models.common import rmsnorm
+
+    b, s, e = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    q_nope = shard_activation(q_nope, ("act_batch", "act_seq", "act_heads", None))
+
+    c_kv = jnp.einsum("bse,er->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv = rmsnorm({"scale": p["kv_norm"]}, c_kv, cfg.norm_eps)
+    k_rope = jnp.einsum("bse,ed->bsd", x, p["w_kr"].astype(x.dtype))
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is None:
+        # Train/prefill: expand per-head keys/values from the compressed kv.
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        mask = (positions, positions) if causal else None
+        out = _sdpa(q, k, v, mask, scale)
+        new_cache = None
+        if make_cache:
+            comp = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+            pad = cache_len - s
+            comp = jnp.pad(comp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            comp = shard_activation(comp, ("cache_batch", "cache_seq", None, None))
+            new_cache = KVCache(
+                k=comp,
+                v=jnp.zeros((b, 0, 0, 0), comp.dtype),  # folded into k
+                length=jnp.full((b,), s, jnp.int32),
+            )
+    else:
+        # Decode with weight absorption: score against the compressed cache.
+        comp_new = jnp.concatenate([c_kv, k_rope], axis=-1)  # (B, 1, kvl+dr)
+        bidx = jnp.arange(b)
+        kc = cache.k.at[bidx, cache.length].set(
+            comp_new[:, 0, :][:, None, :].astype(cache.k.dtype)
+        )
+        kc = shard_activation(kc, ("cache_batch", "cache_seq", None, None))
+        new_len = cache.length + 1
+        s_cache = kc.shape[1]
+        c_cache = kc[:, :, 0, :kvl]          # (B, S, kvl)
+        r_cache = kc[:, :, 0, kvl:]          # (B, S, dr)
+        # Absorb W_uk into q: q_c (B,1,H,kvl).
+        q_c = jnp.einsum("bshd,rhd->bshr", q_nope, p["w_uk"].astype(x.dtype))
+        scores = (
+            jnp.einsum("bshr,bkr->bshk", q_c, c_cache.astype(x.dtype))
+            + jnp.einsum("bshd,bkd->bshk", q_rope, r_cache.astype(x.dtype))
+        ).astype(jnp.float32) * scale
+        kv_mask = jnp.arange(s_cache)[None, :] < new_len[:, None]
+        scores = jnp.where(kv_mask[:, None, None, :], scores, NEG_INF)
+        pr = jax.nn.softmax(scores, axis=-1)
+        ctx_c = jnp.einsum("bshk,bkr->bshr", pr.astype(x.dtype), c_cache.astype(x.dtype))
+        out = jnp.einsum("bshr,rhd->bshd", ctx_c, p["w_uv"].astype(x.dtype))
+        new_cache = KVCache(k=kc, v=cache.v, length=new_len)
+
+    out = jnp.einsum("bshd,hde->bse", out, p["w_o"].astype(x.dtype))
+    return shard_activation(out, ("act_batch", "act_seq", None)), new_cache
+
+
+def attn_params(b: Builder, cfg: ModelConfig):
+    return mla_params(b, cfg) if cfg.attn_type == "mla" else gqa_params(b, cfg)
+
+
+def attn_apply(p, x, cfg, positions, **kw):
+    fn = mla_apply if cfg.attn_type == "mla" else gqa_apply
+    return fn(p, x, cfg, positions, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> KVCache:
+    """Empty cache for one attention layer."""
+    if cfg.attn_type == "mla":
+        dk = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        return KVCache(
+            k=jnp.zeros((batch, cache_len, 1, dk), dtype),
+            v=jnp.zeros((batch, 0, 0, 0), dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+        )
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )

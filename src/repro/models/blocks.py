@@ -1,0 +1,277 @@
+"""Layer kinds, stage grouping, and the scanned block machinery.
+
+A layer is (mixer, ffn, cross?) where mixer ∈ {attn, mamba, rwkv} and
+ffn ∈ {mlp, moe, rwkv_cm}. Heterogeneous stacks (DeepSeek's leading
+dense layers, Jamba's 8-layer attn/mamba/MoE pattern) are expressed as
+*stages*: a group of explicitly-listed layer kinds scanned `repeats`
+times with stacked parameters — the group body is unrolled inside the
+scan, so the HLO stays compact (one group body per stage) even for
+61-72 layer models. Remat wraps the group body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import Builder, residual_scale, rmsnorm, rmsnorm_params
+from repro.models.mlp import mlp_apply, mlp_params
+from repro.models.moe import moe_apply, moe_params
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str             # attn | mamba | rwkv
+    ffn: Optional[str]     # mlp | moe | rwkv_cm | None
+    cross: bool = False    # add cross-attention (enc-dec decoder)
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    kinds: Tuple[LayerKind, ...]
+    repeats: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.kinds) * self.repeats
+
+
+def build_stages(cfg: ModelConfig) -> "list[Stage]":
+    """Derive the stage structure from a ModelConfig."""
+    if cfg.ssm_type == "rwkv6":
+        return [Stage((LayerKind("rwkv", "rwkv_cm"),), cfg.n_layers)]
+    if cfg.attn_period:  # jamba-style hybrid
+        kinds = []
+        for i in range(cfg.attn_period):
+            mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+            ffn = "moe" if cfg.is_moe_layer(i) else "mlp"
+            kinds.append(LayerKind(mixer, ffn))
+        assert cfg.n_layers % cfg.attn_period == 0
+        return [Stage(tuple(kinds), cfg.n_layers // cfg.attn_period)]
+    if cfg.moe_enabled:
+        stages = []
+        if cfg.first_k_dense:
+            stages.append(Stage((LayerKind("attn", "mlp"),), cfg.first_k_dense))
+        n_rest = cfg.n_layers - cfg.first_k_dense
+        if cfg.moe_every == 1:
+            stages.append(Stage((LayerKind("attn", "moe"),), n_rest))
+        else:
+            kinds = tuple(
+                LayerKind(
+                    "attn",
+                    "moe" if (i % cfg.moe_every) == cfg.moe_offset else "mlp",
+                )
+                for i in range(cfg.moe_every)
+            )
+            assert n_rest % cfg.moe_every == 0
+            stages.append(Stage(kinds, n_rest // cfg.moe_every))
+        return stages
+    cross = cfg.is_encoder_decoder
+    return [Stage((LayerKind("attn", "mlp", cross=cross),), cfg.n_layers)]
+
+
+def encoder_stages(cfg: ModelConfig) -> "list[Stage]":
+    return [
+        Stage((LayerKind("attn", "mlp", causal=False),), cfg.n_encoder_layers)
+    ]
+
+
+# ------------------------------------------------------------- parameters
+
+
+def layer_params(b: Builder, cfg: ModelConfig, kind: LayerKind):
+    p: "dict[str, Any]" = {"ln1": rmsnorm_params(b, cfg.d_model)}
+    if kind.mixer == "attn":
+        p["mix"] = attn_mod.attn_params(b, cfg)
+    elif kind.mixer == "mamba":
+        p["mix"] = mamba_mod.mamba_params(b, cfg)
+    elif kind.mixer == "rwkv":
+        p["mix"] = rwkv_mod.rwkv_params(b, cfg)
+    else:
+        raise ValueError(kind.mixer)
+    if kind.cross:
+        p["ln_cross"] = rmsnorm_params(b, cfg.d_model)
+        p["cross"] = attn_mod.gqa_params(b, cfg)
+    if kind.ffn is not None:
+        p["ln2"] = rmsnorm_params(b, cfg.d_model)
+        if kind.ffn == "mlp":
+            p["ffn"] = mlp_params(b, cfg)
+        elif kind.ffn == "moe":
+            p["ffn"] = moe_params(b, cfg)
+        elif kind.ffn == "rwkv_cm":
+            pass  # channel-mix weights live inside the rwkv mixer dict
+        else:
+            raise ValueError(kind.ffn)
+    return p
+
+
+def stage_params_fn(stage: Stage):
+    def fn(b: Builder, cfg: ModelConfig):
+        return {
+            f"l{i}": layer_params(b, cfg, kind)
+            for i, kind in enumerate(stage.kinds)
+        }
+    return fn
+
+
+# ------------------------------------------------------------------ apply
+
+
+def apply_layer(
+    p,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: LayerKind,
+    positions: jax.Array,
+    *,
+    cache=None,
+    make_cache: bool = False,
+    cache_len: int = 0,
+    enc_kv=None,
+    enc_mask=None,
+):
+    """One layer. Returns (x, aux_loss, new_cache)."""
+    rs = residual_scale(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind.mixer == "attn":
+        out, c = attn_mod.attn_apply(
+            p["mix"], h, cfg, positions,
+            causal=kind.causal,
+            cache=None if cache is None else cache.get("self"),
+            make_cache=make_cache,
+            cache_len=cache_len,
+        )
+        if c is not None:
+            new_cache["self"] = c
+    elif kind.mixer == "mamba":
+        state = None if cache is None else cache.get("ssm")
+        if state is None and make_cache:
+            state = mamba_mod.init_mamba_state(cfg, x.shape[0], x.dtype)
+        out, c = mamba_mod.mamba_apply(p["mix"], h, cfg, state)
+        if c is not None:
+            new_cache["ssm"] = c
+    elif kind.mixer == "rwkv":
+        state = None if cache is None else cache.get("rwkv")
+        if state is None and make_cache:
+            state = rwkv_mod.init_rwkv_state(cfg, x.shape[0], x.dtype)
+        out, c = rwkv_mod.time_mix(p["mix"], h, cfg, state)
+        if c is not None:
+            new_cache["rwkv"] = c
+    else:
+        raise ValueError(kind.mixer)
+    x = x + rs * out
+
+    if kind.cross:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        if cache is not None and "cross" in cache:
+            k_all, v_all = cache["cross"]
+        else:
+            # enc_kv is the encoder hidden state (B, T_enc, E).
+            k_all = jnp.einsum(
+                "bte,ehd->bthd", enc_kv, p["cross"]["wk"].astype(x.dtype)
+            )
+            v_all = jnp.einsum(
+                "bte,ehd->bthd", enc_kv, p["cross"]["wv"].astype(x.dtype)
+            )
+        out, _ = attn_mod.gqa_apply(
+            p["cross"], h, cfg, positions,
+            causal=False,
+            kv_override=(k_all, v_all, enc_mask),
+        )
+        x = x + rs * out
+        if make_cache or cache is not None:
+            new_cache["cross"] = (k_all, v_all)
+
+    if kind.ffn == "rwkv_cm":
+        state = None if cache is None else cache.get("rwkv")
+        state = new_cache.get("rwkv", state)  # shift state updated by time mix
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        out, c = rwkv_mod.channel_mix(p["mix"], h, state)
+        if c is not None:
+            new_cache["rwkv"] = c
+        x = x + rs * out
+    elif kind.ffn is not None:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind.ffn == "mlp":
+            out = mlp_apply(p["ffn"], h, cfg)
+        else:
+            out, aux = moe_apply(p["ffn"], h, cfg)
+        x = x + rs * out
+
+    return x, aux, (new_cache if new_cache else None)
+
+
+def _group_body(
+    layer_ps,
+    x,
+    caches,
+    cfg: ModelConfig,
+    stage: Stage,
+    positions,
+    mode: str,
+    cache_len: int,
+    enc_kv,
+    enc_mask,
+):
+    """Apply one group of stage.kinds layers. caches: dict l{i} -> cache."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for i, kind in enumerate(stage.kinds):
+        x, aux, nc = apply_layer(
+            layer_ps[f"l{i}"], x, cfg, kind, positions,
+            cache=None if caches is None else caches.get(f"l{i}"),
+            make_cache=(mode == "prefill"),
+            cache_len=cache_len,
+            enc_kv=enc_kv,
+            enc_mask=enc_mask,
+        )
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_caches[f"l{i}"] = nc
+    return x, aux_total, (new_caches if new_caches else None)
+
+
+def stage_apply(
+    stage_ps,
+    x: jax.Array,
+    cfg: ModelConfig,
+    stage: Stage,
+    positions: jax.Array,
+    *,
+    mode: str = "train",          # train | prefill | decode
+    caches=None,                  # stacked over repeats for decode
+    cache_len: int = 0,
+    enc_kv=None,                  # (k, v) encoder cross KV (B, T, H, D)
+    enc_mask=None,
+    remat: bool = True,
+):
+    """Scan the stage over its repeats. Returns (x, aux, new_caches)."""
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_ps, caches_l = xs
+        x, aux_i, new_c = _group_body(
+            layer_ps, x, caches_l, cfg, stage, positions, mode, cache_len,
+            enc_kv, enc_mask,
+        )
+        return (x, aux + aux_i), new_c
+
+    body_fn = jax.checkpoint(body) if (remat and mode == "train") else body
+
+    caches_xs = caches  # stacked pytree or None
+    (x, aux), new_caches = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), (stage_ps, caches_xs),
+        length=stage.repeats,
+    )
+    return x, aux, new_caches

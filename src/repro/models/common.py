@@ -1,0 +1,175 @@
+"""Shared model building blocks + the dual-mode parameter Builder.
+
+Every parameter is declared once via Builder.param(shape, axes): in
+"init" mode it returns an initialised array, in "axes" mode the logical
+axis tuple — so the sharding spec tree can never drift from the param
+tree (tests assert they match for every arch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(name: str) -> jnp.dtype:
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class Builder:
+    """Dual-mode parameter factory (init arrays / logical axes)."""
+
+    def __init__(self, mode: str, key: Optional[jax.Array], dtype: jnp.dtype):
+        assert mode in ("init", "axes")
+        self.mode = mode
+        self._key = key
+        self.dtype = dtype
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(
+        self,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        *,
+        init: str = "normal",
+        scale: Optional[float] = None,
+    ):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.mode == "axes":
+            return tuple(axes)
+        if init == "zeros":
+            return jnp.zeros(tuple(shape), self.dtype)
+        if init == "ones":
+            return jnp.ones(tuple(shape), self.dtype)
+        if init == "normal":
+            if scale is None:
+                scale = shape[0] ** -0.5  # fan-in scaling
+            x = scale * jax.random.normal(
+                self._next_key(), tuple(shape), jnp.float32
+            )
+            return x.astype(self.dtype)
+        raise ValueError(init)
+
+
+def build_params(fn, cfg: ModelConfig, key: jax.Array):
+    """Run a param-declaring fn in init mode."""
+    return fn(Builder("init", key, dtype_of(cfg.param_dtype)), cfg)
+
+
+def build_axes(fn, cfg: ModelConfig):
+    """Run the same fn in axes mode (no keys, no allocation)."""
+    return fn(Builder("axes", None, dtype_of(cfg.param_dtype)), cfg)
+
+
+def stacked_init(fn, cfg: ModelConfig, key: jax.Array, n: int):
+    """vmap-init n stacked copies (for lax.scan over layers)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: build_params(fn, cfg, k))(keys)
+
+
+def stacked_axes(fn, cfg: ModelConfig):
+    """Axes for stacked params: prepend the scanned 'layers' dim."""
+    axes = build_axes(fn, cfg)
+    return jax.tree_util.tree_map(
+        lambda a: ("layers",) + a,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+# ------------------------------------------------------------------ layers
+
+
+def rmsnorm_params(b: Builder, dim: int):
+    return {"scale": b.param((dim,), ("norm",), init="ones")}
+
+
+def rmsnorm(p, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, D) [D even]; positions: (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_params(b: Builder, cfg: ModelConfig):
+    v = cfg.vocab_padded
+    p = {"tok": b.param((v, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = b.param(
+            (cfg.d_model, v), ("embed", "vocab"),
+            scale=cfg.d_model ** -0.5,
+        )
+    return p
+
+
+def embed_lookup(p, tokens: jax.Array, cfg: ModelConfig, compute_dtype) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(compute_dtype)
+    return x * cfg.scale_emb
+
+
+def lm_logits(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    from repro.sharding.rules import shard_activation
+
+    if cfg.tie_embeddings:
+        w = p["tok"].astype(x.dtype).T
+    else:
+        w = p["head"].astype(x.dtype)
+    logits = cfg.scale_logits * jnp.einsum("bse,ev->bsv", x, w).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        # Mask pad entries so CE/argmax never see them.
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = logits + jnp.where(pad, -1e30, 0.0)
+    # Keep logits vocab-sharded: at 100k+ vocabs an unsharded fp32 logits
+    # tensor is tens of GB per device (see EXPERIMENTS §Perf iteration 1).
+    return shard_activation(logits, ("act_batch", "act_seq", "act_vocab"))
+
+
+def residual_scale(cfg: ModelConfig) -> float:
+    """MiniCPM-style depth-scaled residual branches."""
+    if cfg.scale_depth > 0:
+        return cfg.scale_depth / (cfg.n_layers ** 0.5)
+    return 1.0
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean next-token CE in fp32. logits (B,S,V), labels (B,S) int.
+
+    Shard-friendly formulation: the target logit is extracted with a
+    one-hot product (reduces over the vocab dim, which may be sharded)
+    instead of take_along_axis (whose gather would force an all-gather
+    of the logits when vocab is model-sharded).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    tgt = jnp.sum(logits * onehot, axis=-1)
+    ll = tgt - lse
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,49 @@
+"""SwiGLU feed-forward (+ the paper's analog-crossbar execution mode).
+
+With cfg.analog_mvm the projections run through the ideal-analog
+crossbar simulation (kernels/imac_mvm.analog_linear: DAC quantisation,
+differential conductance levels, optional read noise) — IMAC as an
+inference accelerator for the FFN weights, paper ref [1].
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Builder
+from repro.sharding.rules import shard_activation
+
+
+def mlp_params(b: Builder, cfg: ModelConfig, d_ff: int = 0):
+    e = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "w_gate": b.param((e, f), ("embed", "ff")),
+        "w_up": b.param((e, f), ("embed", "ff")),
+        "w_down": b.param((f, e), ("ff", "embed")),
+    }
+
+
+def _proj(x, w, cfg: Optional[ModelConfig]):
+    if cfg is not None and cfg.analog_mvm:
+        from repro.kernels.imac_mvm.ops import analog_linear
+
+        lead = x.shape[:-1]
+        y = analog_linear(
+            x.reshape(-1, x.shape[-1]), w.astype(jnp.float32), None,
+            tech=cfg.analog_tech,
+        )
+        return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    return jnp.einsum("bse,ef->bsf", x, w.astype(x.dtype))
+
+
+def mlp_apply(p, x: jax.Array, cfg: Optional[ModelConfig] = None) -> jax.Array:
+    g = _proj(x, p["w_gate"], cfg)
+    u = _proj(x, p["w_up"], cfg)
+    h = jax.nn.silu(g) * u
+    h = shard_activation(h, ("act_batch", "act_seq", "act_ff"))
+    out = _proj(h, p["w_down"], cfg)
+    return shard_activation(out, ("act_batch", "act_seq", None))

@@ -1,0 +1,408 @@
+"""Unified model: embeddings + staged blocks + heads, for all 10 archs.
+
+API (all pure functions of explicit params — pjit-ready):
+  model.init(key)            -> params
+  model.param_axes()         -> logical-axis tree matching params
+  model.loss_fn(params, batch)          -> (loss, metrics)   [train]
+  model.prefill(params, batch, cache_len) -> (logits, cache) [prefill]
+  model.decode_step(params, cache, tokens) -> (logits, cache) [decode]
+  model.init_cache(batch, cache_len)    -> cache pytree
+
+Batches:
+  train:   {tokens (B,S), labels (B,S), loss_mask? (B,S),
+            vision_embeds (B,P,E)?  [vlm stub frontend],
+            frames (B,T,E)?         [audio stub frontend]}
+  prefill: {tokens (B,S), vision_embeds?/frames?}
+  decode:  tokens (B,1) + the cache pytree (donated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import blocks as blocks_mod
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.blocks import LayerKind, Stage, build_stages, encoder_stages
+from repro.models.common import (
+    Builder,
+    build_axes,
+    build_params,
+    cross_entropy,
+    dtype_of,
+    embed_lookup,
+    embed_params,
+    lm_logits,
+    rmsnorm,
+    rmsnorm_params,
+    stacked_axes,
+    stacked_init,
+)
+from repro.sharding.rules import shard_activation
+
+MOE_AUX_COEF = 0.01
+MTP_COEF = 0.3
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    stages: "list[Stage]"
+    enc_stages: "Optional[list[Stage]]"
+    remat: bool = True
+
+    # ------------------------------------------------------------- params
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        keys = jax.random.split(key, 8 + len(self.stages))
+        p: "dict[str, Any]" = {
+            "embed": build_params(embed_params, cfg, keys[0]),
+            "final_ln": build_params(
+                lambda b, c: rmsnorm_params(b, c.d_model), cfg, keys[1]
+            ),
+            "stages": [
+                stacked_init(
+                    blocks_mod.stage_params_fn(s), cfg, keys[2 + i], s.repeats
+                )
+                for i, s in enumerate(self.stages)
+            ],
+        }
+        off = 2 + len(self.stages)
+        if cfg.family == "vlm":
+            p["vision_proj"] = build_params(
+                lambda b, c: {
+                    "w": b.param((c.d_model, c.d_model), ("embed", "ff"))
+                },
+                cfg, keys[off],
+            )
+        if cfg.is_encoder_decoder:
+            p["frames_proj"] = build_params(
+                lambda b, c: {
+                    "w": b.param((c.d_model, c.d_model), ("embed", "ff"))
+                },
+                cfg, keys[off + 1],
+            )
+            p["encoder"] = [
+                stacked_init(
+                    blocks_mod.stage_params_fn(s), cfg, keys[off + 2], s.repeats
+                )
+                for s in self.enc_stages
+            ]
+            p["enc_ln"] = build_params(
+                lambda b, c: rmsnorm_params(b, c.d_model), cfg, keys[off + 3]
+            )
+        if cfg.mtp:
+            kind = LayerKind("attn", "mlp")
+            p["mtp"] = {
+                "proj": build_params(
+                    lambda b, c: {
+                        "w": b.param(
+                            (2 * c.d_model, c.d_model), ("ff", "embed")
+                        )
+                    },
+                    cfg, keys[off + 4],
+                ),
+                "ln_h": build_params(
+                    lambda b, c: rmsnorm_params(b, c.d_model), cfg, keys[off + 5]
+                ),
+                "ln_e": build_params(
+                    lambda b, c: rmsnorm_params(b, c.d_model), cfg, keys[off + 6]
+                ),
+                "block": build_params(
+                    lambda b, c: blocks_mod.layer_params(b, c, kind),
+                    cfg, keys[off + 7],
+                ),
+            }
+        return p
+
+    def param_axes(self):
+        cfg = self.cfg
+        ax: "dict[str, Any]" = {
+            "embed": build_axes(embed_params, cfg),
+            "final_ln": build_axes(lambda b, c: rmsnorm_params(b, c.d_model), cfg),
+            "stages": [
+                stacked_axes(blocks_mod.stage_params_fn(s), cfg)
+                for s in self.stages
+            ],
+        }
+        if cfg.family == "vlm":
+            ax["vision_proj"] = build_axes(
+                lambda b, c: {"w": b.param((c.d_model, c.d_model), ("embed", "ff"))},
+                cfg,
+            )
+        if cfg.is_encoder_decoder:
+            ax["frames_proj"] = build_axes(
+                lambda b, c: {"w": b.param((c.d_model, c.d_model), ("embed", "ff"))},
+                cfg,
+            )
+            ax["encoder"] = [
+                stacked_axes(blocks_mod.stage_params_fn(s), cfg)
+                for s in self.enc_stages
+            ]
+            ax["enc_ln"] = build_axes(
+                lambda b, c: rmsnorm_params(b, c.d_model), cfg
+            )
+        if cfg.mtp:
+            kind = LayerKind("attn", "mlp")
+            ax["mtp"] = {
+                "proj": build_axes(
+                    lambda b, c: {
+                        "w": b.param((2 * c.d_model, c.d_model), ("ff", "embed"))
+                    },
+                    cfg,
+                ),
+                "ln_h": build_axes(lambda b, c: rmsnorm_params(b, c.d_model), cfg),
+                "ln_e": build_axes(lambda b, c: rmsnorm_params(b, c.d_model), cfg),
+                "block": build_axes(
+                    lambda b, c: blocks_mod.layer_params(b, c, kind), cfg
+                ),
+            }
+        return ax
+
+    # ------------------------------------------------------------- embed
+
+    def _embed(self, params, batch, *, positions_offset=None):
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = embed_lookup(params["embed"], tokens, cfg, cdt)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(cdt)
+            ve = jnp.einsum(
+                "bpe,ef->bpf", ve, params["vision_proj"]["w"].astype(cdt)
+            )
+            x = jnp.concatenate([ve, x], axis=1)
+        s = x.shape[1]
+        if positions_offset is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        else:
+            positions = positions_offset[:, None] + jnp.arange(
+                s, dtype=jnp.int32
+            )
+        x = shard_activation(x, ("act_batch", "act_seq", None))
+        return x, positions
+
+    def _encode(self, params, batch):
+        """Audio/enc-dec encoder over stub frame embeddings."""
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        frames = batch["frames"].astype(cdt)
+        x = jnp.einsum("bte,ef->btf", frames, params["frames_proj"]["w"].astype(cdt))
+        x = shard_activation(x, ("act_batch", "act_seq", None))
+        b, t, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        for sp, st in zip(params["encoder"], self.enc_stages):
+            x, _, _ = blocks_mod.stage_apply(
+                sp, x, cfg, st, positions, mode="train", remat=self.remat
+            )
+        return rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+    # ------------------------------------------------------------- train
+
+    def _backbone(self, params, batch, mode="train"):
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        enc_hidden = None
+        if cfg.is_encoder_decoder:
+            enc_hidden = self._encode(params, batch)
+        aux_total = jnp.zeros((), jnp.float32)
+        for sp, st in zip(params["stages"], self.stages):
+            x, aux, _ = blocks_mod.stage_apply(
+                sp, x, cfg, st, positions,
+                mode="train", enc_kv=enc_hidden, remat=self.remat,
+            )
+            aux_total = aux_total + aux
+        x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        return x, aux_total, positions
+
+    def forward(self, params, batch):
+        x, aux, _ = self._backbone(params, batch)
+        return lm_logits(params["embed"], x, self.cfg), aux
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        x, aux, positions = self._backbone(params, batch)
+        logits = lm_logits(params["embed"], x, cfg)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if cfg.family == "vlm":
+            # Text tokens only: the vision prefix produced no labels.
+            n_prefix = x.shape[1] - labels.shape[1]
+            logits = logits[:, n_prefix:]
+        ce = cross_entropy(logits, labels, mask)
+        loss = ce + MOE_AUX_COEF * aux
+
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp:
+            mtp_loss = self._mtp_loss(params, x, batch, positions)
+            loss = loss + MTP_COEF * mtp_loss
+            metrics["mtp"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(self, params, h, batch, positions):
+        """DeepSeek-V3 multi-token prediction (depth 1): predict t+2."""
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        p = params["mtp"]
+        tokens = batch["tokens"]
+        # Next-token embeddings aligned with h_t.
+        nxt = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        e = embed_lookup(params["embed"], nxt, cfg, cdt)
+        hh = rmsnorm(p["ln_h"], h, cfg.norm_eps)
+        ee = rmsnorm(p["ln_e"], e, cfg.norm_eps)
+        z = jnp.concatenate([hh, ee], axis=-1)
+        z = jnp.einsum("bsf,fe->bse", z, p["proj"]["w"].astype(cdt))
+        kind = LayerKind("attn", "mlp")
+        z, _, _ = blocks_mod.apply_layer(p["block"], z, cfg, kind, positions)
+        logits = lm_logits(params["embed"], z, cfg)
+        # Labels shifted one further: h_t predicts token t+2.
+        lab2 = jnp.pad(batch["labels"][:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.ones_like(lab2, jnp.float32).at[:, -1].set(0.0)
+        if batch.get("loss_mask") is not None:
+            mask = mask * batch["loss_mask"].astype(jnp.float32)
+        return cross_entropy(logits, lab2, mask)
+
+    # ----------------------------------------------------------- serving
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        enc_hidden = None
+        if cfg.is_encoder_decoder:
+            enc_hidden = self._encode(params, batch)
+        caches = []
+        for sp, st in zip(params["stages"], self.stages):
+            x, _, cache_s = blocks_mod.stage_apply(
+                sp, x, cfg, st, positions,
+                mode="prefill", cache_len=cache_len, enc_kv=enc_hidden,
+                remat=False,
+            )
+            caches.append(cache_s)
+        x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x[:, -1:], cfg)
+        cache = {
+            "stages": caches,
+            "pos": jnp.full((x.shape[0],), x.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1) -> (logits (B,1,V), updated cache)."""
+        cfg = self.cfg
+        x, positions = self._embed(
+            params, {"tokens": tokens}, positions_offset=cache["pos"]
+        )
+        new_stage_caches = []
+        for sp, st, cache_s in zip(params["stages"], self.stages, cache["stages"]):
+            x, _, new_c = blocks_mod.stage_apply(
+                sp, x, cfg, st, positions,
+                mode="decode", caches=cache_s, remat=False,
+            )
+            new_stage_caches.append(new_c)
+        x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x, cfg)
+        new_cache = {"stages": new_stage_caches, "pos": cache["pos"] + 1}
+        return logits, new_cache
+
+    def init_cache(self, batch: int, cache_len: int):
+        """Zeroed cache pytree (use under jax.eval_shape for dry-runs)."""
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+
+        def layer_cache(kind: LayerKind):
+            c = {}
+            if kind.mixer == "attn":
+                c["self"] = attn_mod.init_cache(cfg, batch, cache_len, cdt)
+            elif kind.mixer == "mamba":
+                c["ssm"] = mamba_mod.init_mamba_state(cfg, batch, cdt)
+            elif kind.mixer == "rwkv":
+                c["rwkv"] = rwkv_mod.init_rwkv_state(cfg, batch, cdt)
+            if kind.cross:
+                kv = cfg.n_kv_heads
+                c["cross"] = (
+                    jnp.zeros((batch, cfg.encoder_seq, kv, cfg.head_dim), cdt),
+                    jnp.zeros((batch, cfg.encoder_seq, kv, cfg.head_dim), cdt),
+                )
+            return c
+
+        def stage_cache(st: Stage):
+            one = {
+                f"l{i}": layer_cache(k)
+                for i, k in enumerate(st.kinds)
+                if layer_cache(k)
+            }
+            # Stack over repeats (leading scan dim).
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (st.repeats,) + a.shape), one
+            )
+
+        return {
+            "stages": [stage_cache(s) for s in self.stages],
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_axes(self):
+        """Logical sharding axes matching init_cache's pytree."""
+        cfg = self.cfg
+
+        def layer_axes(kind: LayerKind):
+            c = {}
+            if kind.mixer == "attn":
+                c["self"] = attn_mod.KVCache(
+                    k=("cache_batch", "cache_seq", None, None),
+                    v=("cache_batch", "cache_seq", None, None),
+                    length=("cache_batch",),
+                )
+            elif kind.mixer == "mamba":
+                c["ssm"] = mamba_mod.MambaState(
+                    ssm=("cache_batch", "act_ff", None),
+                    conv=("cache_batch", None, "act_ff"),
+                )
+            elif kind.mixer == "rwkv":
+                c["rwkv"] = rwkv_mod.RWKVState(
+                    wkv=("cache_batch", "act_heads", None, None),
+                    shift_tm=("cache_batch", None),
+                    shift_cm=("cache_batch", None),
+                )
+            if kind.cross:
+                c["cross"] = (
+                    ("cache_batch", "cache_seq", None, None),
+                    ("cache_batch", "cache_seq", None, None),
+                )
+            return c
+
+        def stage_axes(st: Stage):
+            one = {
+                f"l{i}": layer_axes(k)
+                for i, k in enumerate(st.kinds)
+                if layer_axes(k)
+            }
+            return jax.tree_util.tree_map(
+                lambda a: ("layers",) + a,
+                one,
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(e, (str, type(None))) for e in x),
+            )
+
+        return {
+            "stages": [stage_axes(s) for s in self.stages],
+            "pos": ("cache_batch",),
+        }
+
+
+def build_model(cfg: ModelConfig, *, remat: bool = True) -> Model:
+    stages = build_stages(cfg)
+    enc = encoder_stages(cfg) if cfg.is_encoder_decoder else None
+    assert sum(s.n_layers for s in stages) == cfg.n_layers, (
+        stages, cfg.n_layers,
+    )
+    return Model(cfg=cfg, stages=stages, enc_stages=enc, remat=remat)

@@ -1,0 +1,279 @@
+"""RWKV-6 "Finch" blocks — attention-free, data-dependent decay
+(arXiv:2404.05892). Implements the time-mix (ddlerp token shift, LoRA
+decay, per-head wkv state recurrence with bonus u) and channel-mix
+halves. The recurrence runs as a lax.scan over time in training (compact
+HLO for the dry-run) and as a single state update in decoding — O(1)
+state means the long_500k serving shape is trivial for this arch.
+
+State per layer: wkv (B, H, Dk, Dv) + the last-token shift buffers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Builder
+from repro.sharding.rules import shard_activation
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array        # (B, H, Dk, Dv)
+    shift_tm: jax.Array   # (B, E) previous token (time mix)
+    shift_cm: jax.Array   # (B, E) previous token (channel mix)
+
+
+def rwkv_params(b: Builder, cfg: ModelConfig):
+    e = cfg.d_model
+    h, d = cfg.n_heads, cfg.head_dim
+    f = cfg.d_ff
+    return {
+        # time mix
+        "mu_base": b.param((5, e), (None, "embed"), init="zeros"),
+        "tm_w1": b.param((e, 5 * LORA_MIX), ("embed", None), scale=0.01),
+        "tm_w2": b.param((5, LORA_MIX, e), (None, None, "embed"), scale=0.01),
+        "w0": b.param((e,), ("embed",), init="zeros"),
+        "td_w1": b.param((e, LORA_DECAY), ("embed", None), scale=0.01),
+        "td_w2": b.param((LORA_DECAY, e), (None, "embed"), scale=0.01),
+        "u": b.param((h, d), ("heads", None), scale=0.5),
+        "wr": b.param((e, e), ("embed", "ff")),
+        "wk": b.param((e, e), ("embed", "ff")),
+        "wv": b.param((e, e), ("embed", "ff")),
+        "wg": b.param((e, e), ("embed", "ff")),
+        "wo": b.param((e, e), ("ff", "embed")),
+        "ln_x_scale": b.param((e,), ("norm",), init="ones"),
+        # channel mix
+        "cm_mu_k": b.param((e,), ("embed",), init="zeros"),
+        "cm_mu_r": b.param((e,), ("embed",), init="zeros"),
+        "cm_wk": b.param((e, f), ("embed", "ff")),
+        "cm_wv": b.param((f, e), ("ff", "embed")),
+        "cm_wr": b.param((e, e), ("embed", None)),
+    }
+
+
+def _ddlerp(p, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent lerp producing the 5 mixed streams (r,k,v,w,g)."""
+    dx = x_prev - x
+    base = x + dx * jax.nn.sigmoid(p["mu_base"]).astype(x.dtype)[:, None, :].swapaxes(0, 1) \
+        if False else None
+    # (B, S, 5*LORA) -> (B, S, 5, LORA)
+    mixed = jnp.tanh(
+        jnp.einsum("bse,el->bsl", x + 0.5 * dx, p["tm_w1"].astype(x.dtype))
+    )
+    b_, s_, _ = x.shape
+    mixed = mixed.reshape(b_, s_, 5, LORA_MIX)
+    delta = jnp.einsum("bsnl,nle->bsne", mixed, p["tm_w2"].astype(x.dtype))
+    mu = jax.nn.sigmoid(p["mu_base"].astype(jnp.float32)).astype(x.dtype)
+    mix = mu[None, None] + delta                       # (B, S, 5, E)
+    return x[:, :, None, :] + dx[:, :, None, :] * mix
+
+
+SCAN_UNROLL = 16
+WKV_CHUNK = 16
+
+
+def _wkv_chunked(r, k, v, logw, u, state):
+    """Chunk-parallel WKV (flash-linear-attention style), §Perf iter 2.
+
+    Derivation (per head, channel d; step form: o_t = r_t·S_{t-1} +
+    (r_t·(u⊙k_t))v_t;  S_t = w_t⊙S_{t-1} + k_t⊗v_t):
+      cl[t]  = Σ_{j<=t} log w_j   (cumulative, <= 0)
+      o_t    = r_t·(e^{cl[t-1]}⊙S0)                      [inter, matmul]
+             + Σ_{i<t} (Σ_d r_t k_i e^{cl[t-1]-cl[i]}) v_i [intra, einsum]
+             + (r_t·(u⊙k_t)) v_t                          [diagonal]
+      S_end  = e^{cl[L-1]}⊙S0 + Σ_i e^{cl[L-1]-cl[i]}⊙(k_i⊗v_i)
+    Every exponent is a *difference of later-minus-earlier* cumulative
+    log-decays, so every factor is <= 1 — no overflow, unlike the
+    r'=r·e^{cl}, k'=k·e^{-cl} factorisation. Intra-chunk terms for all
+    chunks compute as batched einsums (MXU); only the tiny state update
+    scans across chunks, so the (B,H,Dk,Dv) state crosses HBM once per
+    chunk instead of every timestep.
+
+    r/k/v/logw: (B,T,H,D) f32; u: (H,D); state: (B,H,Dk,Dv).
+    """
+    b, t, h, d = r.shape
+    L = WKV_CHUNK
+    n = t // L
+    rs = r.reshape(b, n, L, h, d)
+    ks = k.reshape(b, n, L, h, d)
+    vs = v.reshape(b, n, L, h, d)
+    wl = logw.reshape(b, n, L, h, d)
+
+    cl = jnp.cumsum(wl, axis=2)                     # (B,n,L,H,D), <= 0
+    clm1 = jnp.pad(cl, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :-1]
+    cl_tot = cl[:, :, -1]                           # (B,n,H,D)
+
+    # Intra-chunk: pairwise decays (strictly lower-triangular in (t,i)).
+    diff = clm1[:, :, :, None] - cl[:, :, None]     # (B,n,L,L,H,D)
+    tri = (
+        jnp.arange(L)[:, None] > jnp.arange(L)[None, :]
+    )[None, None, :, :, None, None]
+    d_pair = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    a_mat = jnp.einsum("bnthd,bntihd,bnihd->bntih", rs, d_pair, ks)
+    o_intra = jnp.einsum("bntih,bnihv->bnthv", a_mat, vs)
+    diag = jnp.einsum("bnthd,hd,bnthd->bnth", rs, u, ks)
+    o_intra = o_intra + diag[..., None] * vs
+
+    # Inter-chunk: sequential state pass (small per-chunk einsums).
+    r2 = rs * jnp.exp(clm1)                         # decays <= 1
+    k2 = ks * jnp.exp(cl_tot[:, :, None] - cl)      # decays <= 1
+    s_delta = jnp.einsum("bnlhd,bnlhv->bnhdv", k2, vs)
+    decay_tot = jnp.exp(cl_tot)                     # (B,n,H,D)
+
+    def chunk_step(s, inp):
+        r2_c, sd_c, dt_c = inp                      # per-chunk slices
+        o = jnp.einsum("blhd,bhdv->blhv", r2_c, s)
+        s = dt_c[..., None] * s + sd_c
+        return s, o
+
+    xs = (
+        jnp.moveaxis(r2, 1, 0),
+        jnp.moveaxis(s_delta, 1, 0),
+        jnp.moveaxis(decay_tot, 1, 0),
+    )
+    s_final, o_inter = jax.lax.scan(chunk_step, state, xs)
+    o_inter = jnp.moveaxis(o_inter, 0, 1)           # (B,n,L,H,Dv)
+
+    out = (o_intra + o_inter).reshape(b, t, h, d)
+    return out, s_final
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Recurrence: S_t = diag(w_t) S + k_t^T v_t; o_t = r_t (S + u k_t^T v_t).
+
+    r/k/w: (B, T, H, Dk); v: (B, T, H, Dv); u: (H, Dk);
+    state: (B, H, Dk, Dv). Returns (out (B,T,H,Dv), new state).
+
+    unroll=16 so the (B,H,Dk,Dv) wkv state and the per-step outer
+    products stay fused inside one loop body per 16 timesteps (§Perf
+    iteration 1); state sharded over heads.
+    """
+    from repro.sharding.rules import shard_activation
+
+    state = shard_activation(state, ("act_batch", "act_heads", None, None))
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, D*)
+        a = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * a)
+        s = w_t[..., None] * s + a
+        return s, o
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    t_len = r.shape[1]
+    unroll = SCAN_UNROLL if t_len % SCAN_UNROLL == 0 else 1
+    new_state, outs = jax.lax.scan(step, state, (rs, ks, vs, ws), unroll=unroll)
+    return jnp.moveaxis(outs, 0, 1), new_state
+
+
+def time_mix(
+    p,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[RWKVState],
+) -> Tuple[jax.Array, Optional[RWKVState]]:
+    b, s, e = x.shape
+    h, d = cfg.n_heads, cfg.head_dim
+    f32 = jnp.float32
+
+    if state is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        shift_out = x[:, -1, :]
+    else:
+        x_prev = jnp.concatenate([state.shift_tm[:, None, :], x[:, :-1]], axis=1)
+        shift_out = x[:, -1, :]
+
+    streams = _ddlerp(p, x, x_prev)                    # (B, S, 5, E)
+    xr, xk, xv, xw, xg = (streams[:, :, i, :] for i in range(5))
+
+    r = jnp.einsum("bse,ef->bsf", xr, p["wr"].astype(x.dtype)).reshape(b, s, h, d)
+    k = jnp.einsum("bse,ef->bsf", xk, p["wk"].astype(x.dtype)).reshape(b, s, h, d)
+    v = jnp.einsum("bse,ef->bsf", xv, p["wv"].astype(x.dtype)).reshape(b, s, h, d)
+    g = jnp.einsum("bse,ef->bsf", xg, p["wg"].astype(x.dtype))
+    r = shard_activation(r, ("act_batch", "act_seq", "act_heads", None))
+    k = shard_activation(k, ("act_batch", "act_seq", "act_heads", None))
+    v = shard_activation(v, ("act_batch", "act_seq", "act_heads", None))
+
+    # Data-dependent decay in (0, 1): w = exp(-exp(w0 + lora(xw))).
+    dw = jnp.einsum(
+        "bsl,le->bse",
+        jnp.tanh(jnp.einsum("bse,el->bsl", xw, p["td_w1"].astype(x.dtype))),
+        p["td_w2"].astype(x.dtype),
+    )
+    logw = p["w0"].astype(f32)[None, None] + dw.astype(f32)
+    log_decay = -jnp.exp(logw).reshape(b, s, h, d)  # log w_t <= 0
+
+    wkv0 = (
+        state.wkv if state is not None else jnp.zeros((b, h, d, d), f32)
+    )
+    from repro.sharding.rules import shard_activation as _sa
+
+    wkv0 = _sa(wkv0, ("act_batch", "act_heads", None, None))
+    if s % WKV_CHUNK == 0 and s >= 2 * WKV_CHUNK:
+        out, wkv1 = _wkv_chunked(
+            r.astype(f32), k.astype(f32), v.astype(f32), log_decay,
+            p["u"].astype(f32), wkv0,
+        )
+    else:
+        out, wkv1 = _wkv_scan(
+            r.astype(f32), k.astype(f32), v.astype(f32),
+            jnp.exp(log_decay), p["u"].astype(f32), wkv0,
+        )
+    out = out.reshape(b, s, e).astype(x.dtype)
+
+    # Per-head group norm, then gate and project.
+    out = out.reshape(b, s, h, d)
+    mean = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = ((out - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, e)
+    out = out * p["ln_x_scale"].astype(x.dtype)
+    out = out * jax.nn.silu(g)
+    out = jnp.einsum("bse,ef->bsf", out, p["wo"].astype(x.dtype))
+    out = shard_activation(out, ("act_batch", "act_seq", None))
+
+    new_state = None
+    if state is not None:
+        new_state = RWKVState(
+            wkv=wkv1, shift_tm=shift_out, shift_cm=state.shift_cm
+        )
+    return out, new_state
+
+
+def channel_mix(
+    p, x: jax.Array, state: Optional[RWKVState]
+) -> Tuple[jax.Array, Optional[RWKVState]]:
+    if state is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate([state.shift_cm[:, None, :], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    mu_k = jax.nn.sigmoid(p["cm_mu_k"].astype(jnp.float32)).astype(x.dtype)
+    mu_r = jax.nn.sigmoid(p["cm_mu_r"].astype(jnp.float32)).astype(x.dtype)
+    xk = x + dx * mu_k
+    xr = x + dx * mu_r
+    k = jnp.einsum("bse,ef->bsf", xk, p["cm_wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = shard_activation(k, ("act_batch", "act_seq", "act_ff"))
+    kv = jnp.einsum("bsf,fe->bse", k, p["cm_wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bse,ef->bsf", xr, p["cm_wr"].astype(x.dtype))
+    )
+    out = r * kv
+    new_state = None
+    if state is not None:
+        new_state = state._replace(shift_cm=x[:, -1, :])
+    return shard_activation(out, ("act_batch", "act_seq", None)), new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:
+    h, d, e = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return RWKVState(
+        wkv=jnp.zeros((batch, h, d, d), jnp.float32),
+        shift_tm=jnp.zeros((batch, e), dtype),
+        shift_cm=jnp.zeros((batch, e), dtype),
+    )

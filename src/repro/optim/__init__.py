@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import (  # noqa: F401
+    cosine_schedule,
+    make_schedule,
+    wsd_schedule,
+)

@@ -1,0 +1,155 @@
+"""AdamW with optional 8-bit (block-quantised) first/second moments.
+
+At kimi-k2 scale, fp32 Adam moments are 8 TB; blockwise int8 moments with
+fp32 per-block absmax scales (bitsandbytes-style) cut that 4x with
+negligible quality impact — block size is static so everything jits and
+shards like the fp32 path.
+
+All functions are pure pytree -> pytree; no optimizer library involved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # elements per quantisation block
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_bits: int = 32  # 32 or 8
+
+
+@jax.tree_util.register_pytree_node_class
+class Quantised:
+    """int8 payload (in the parameter's own shape) + per-block fp32
+    absmax scales over the LAST axis. Keeping q in param shape means the
+    state shards exactly like its parameter — a flat layout would force
+    XLA to fully rematerialise (replicate!) the dequantised moments when
+    resharding flat->param layout (observed: 436 GB/device buffers on
+    deepseek expert weights)."""
+
+    def __init__(self, q: jax.Array, scale: jax.Array, shape):
+        self.q = q          # int8, shape == param shape (last dim padded)
+        self.scale = scale  # f32, shape[:-1] + (n_blocks,)
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def __repr__(self):
+        return f"Quantised(shape={self.shape})"
+
+
+def _block_for(last_dim: int) -> int:
+    """Block size: BLOCK when it divides, else the dim itself (small)."""
+    return BLOCK if last_dim % BLOCK == 0 else last_dim
+
+
+def quantise(x: jax.Array) -> Quantised:
+    shape = x.shape
+    if x.ndim == 0:
+        x = x[None]
+    last = x.shape[-1]
+    blk = _block_for(last)
+    blocks = x.reshape(*x.shape[:-1], last // blk, blk)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) + 1e-12
+    q = jnp.round(blocks / scale[..., None] * 127.0).astype(jnp.int8)
+    return Quantised(
+        q=q.reshape(x.shape), scale=scale.astype(jnp.float32), shape=shape
+    )
+
+
+def dequantise(qv: Quantised) -> jax.Array:
+    x = qv.q
+    if not qv.shape:
+        x = x.reshape(1)
+    last = x.shape[-1]
+    blk = _block_for(last)
+    blocks = x.reshape(*x.shape[:-1], last // blk, blk).astype(jnp.float32)
+    out = blocks * qv.scale[..., None] / 127.0
+    return out.reshape(qv.shape)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any   # pytree: fp32 arrays (32-bit) or Quantised leaves (8-bit)
+    v: Any
+
+
+def _is_state_leaf(x) -> bool:
+    return isinstance(x, Quantised)
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return quantise(z) if cfg.state_bits == 8 else z
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zero_like, params),
+        v=jax.tree_util.tree_map(zero_like, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jax.Array,
+    cfg: AdamWConfig,
+):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    bits = cfg.state_bits
+
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves, _ = jax.tree_util.tree_flatten(state.m, is_leaf=_is_state_leaf)
+    v_leaves, _ = jax.tree_util.tree_flatten(state.v, is_leaf=_is_state_leaf)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_q, v_q in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+        g = g.astype(jnp.float32) * clip
+        m = dequantise(m_q) if bits == 8 else m_q
+        v = dequantise(v_q) if bits == 8 else v_q
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if p.ndim >= 2:  # decoupled decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * u).astype(p.dtype))
+        new_m.append(quantise(m) if bits == 8 else m)
+        new_v.append(quantise(v) if bits == 8 else v)
+
+    unflatten = jax.tree_util.tree_unflatten
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (
+        unflatten(treedef, new_p),
+        AdamWState(step=step, m=unflatten(treedef, new_m), v=unflatten(treedef, new_v)),
+        metrics,
+    )

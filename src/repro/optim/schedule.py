@@ -1,0 +1,68 @@
+"""LR schedules: WSD (MiniCPM's warmup-stable-decay), cosine, linear."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def wsd_schedule(
+    peak_lr: float,
+    total_steps: int,
+    *,
+    warmup_frac: float = 0.01,
+    decay_frac: float = 0.1,
+    min_ratio: float = 0.1,
+) -> Schedule:
+    """Warmup-Stable-Decay (arXiv:2404.06395): linear warmup, long flat
+    stable phase, sharp final decay to min_ratio * peak."""
+    warm = max(1, int(total_steps * warmup_frac))
+    decay = max(1, int(total_steps * decay_frac))
+    stable_end = total_steps - decay
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = peak_lr * step / warm
+        decay_t = jnp.clip((step - stable_end) / decay, 0.0, 1.0)
+        decay_lr = peak_lr * (1.0 - (1.0 - min_ratio) * decay_t)
+        return jnp.where(step < warm, warm_lr, jnp.where(step < stable_end, peak_lr, decay_lr))
+
+    return fn
+
+
+def cosine_schedule(
+    peak_lr: float,
+    total_steps: int,
+    *,
+    warmup_frac: float = 0.01,
+    min_ratio: float = 0.1,
+) -> Schedule:
+    warm = max(1, int(total_steps * warmup_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = peak_lr * step / warm
+        t = jnp.clip((step - warm) / max(1, total_steps - warm), 0.0, 1.0)
+        cos_lr = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warm, warm_lr, cos_lr)
+
+    return fn
+
+
+def constant_schedule(lr: float) -> Schedule:
+    def fn(step):
+        return jnp.full_like(jnp.asarray(step, jnp.float32), lr)
+
+    return fn
+
+
+def make_schedule(kind: str, peak_lr: float, total_steps: int, **kw) -> Schedule:
+    if kind == "wsd":
+        return wsd_schedule(peak_lr, total_steps, **kw)
+    if kind == "cosine":
+        return cosine_schedule(peak_lr, total_steps, **kw)
+    if kind == "constant":
+        return constant_schedule(peak_lr)
+    raise ValueError(f"unknown schedule {kind!r}")

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    make_sharding,
+    shard_activation,
+    spec_tree,
+)

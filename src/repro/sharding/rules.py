@@ -1,0 +1,208 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Parameters and activations are annotated with *logical* axis names
+("embed", "heads", "experts", "act_batch", ...). Rules map each logical
+axis to an ordered list of mesh-axis candidates; `logical_to_spec` picks
+the first candidate (or candidate tuple) whose product divides the dim
+size and is present in the mesh, else leaves the dim unsharded. That
+gives every architecture a coherent sharding on the fixed production
+mesh even when, e.g., 56 heads don't divide the 16-wide model axis
+(llava) — the fallback is handled by rule order, not by per-arch code.
+
+Parallelism coverage on the (pod, data, model) mesh:
+  DP    — act_batch -> (pod, data)
+  FSDP  — embed -> data (params all-gathered per scanned layer)
+  TP    — ff / heads / vocab / moe_ff -> model
+  EP    — experts -> model
+  SP    — act_seq -> model (sequence parallelism; used when heads do not
+          divide the model axis, and for long-context cache sharding)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Candidate = "str | tuple[str, ...] | None"
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Ordered logical-axis -> mesh-axis-candidate rules."""
+
+    rules: "dict[str, tuple[Candidate, ...]]"
+
+    def candidates(self, logical: str) -> "tuple[Candidate, ...]":
+        return self.rules.get(logical, (None,))
+
+    def extend(self, extra: "dict[str, tuple[Candidate, ...]]") -> "AxisRules":
+        merged = dict(self.rules)
+        merged.update(extra)
+        return AxisRules(merged)
+
+
+DEFAULT_RULES = AxisRules(
+    {
+        # --- parameter axes ---
+        "embed": (("data",), None),          # FSDP
+        "embed_pod": (("pod", "data"), ("data",), None),  # FSDP over pod too
+        "ff": (("model",), None),            # TP
+        "heads": (("model",), None),
+        "kv_heads": (("model",), None),      # falls back to None if indivisible
+        "vocab": (("model",), None),
+        "experts": (("model",), None),       # EP
+        "moe_ff": (None,),                   # expert inner dim stays local
+        "head_dim": (None,),
+        "layers": (None,),                   # scan-stacked leading dim
+        "kv_lora": (None,),
+        "q_lora": (None,),
+        "conv": (None,),
+        "state": (None,),
+        "norm": (None,),
+        # --- activation axes ---
+        "act_batch": (("pod", "data"), ("data",), None),
+        "act_seq": (None,),                  # overridden to ("model",) for SP
+        "act_seq_sp": (("model",), None),
+        "act_embed": (None,),
+        "act_heads": (("model",), None),
+        "act_kv_heads": (("model",), None),
+        "act_ff": (("model",), None),
+        "act_vocab": (("model",), None),
+        "act_experts": (("model",), None),
+        "cache_batch": (("pod", "data"), ("data",), None),
+        "cache_seq": (("model",), None),     # context-parallel KV cache
+        "cache_kv_heads": (None,),
+        # flat (1-D) optimizer payloads: fully shard over every axis
+        "opt_flat": (
+            ("pod", "data", "model"), ("data", "model"), ("data",), None,
+        ),
+    }
+)
+
+
+def _axis_size(mesh: Mesh, cand: Candidate) -> int:
+    if cand is None:
+        return 1
+    names = (cand,) if isinstance(cand, str) else cand
+    size = 1
+    for n in names:
+        if n not in mesh.shape:
+            return -1  # not available on this mesh
+        size *= mesh.shape[n]
+    return size
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    dim_sizes: Sequence[int],
+    mesh: Mesh,
+    rules: AxisRules = DEFAULT_RULES,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec for `mesh`.
+
+    Every logical axis tries its candidates in order; a candidate is
+    accepted if all its mesh axes exist, are unused so far in this spec,
+    and their product divides the dimension size.
+    """
+    assert len(logical_axes) == len(dim_sizes), (logical_axes, dim_sizes)
+    used: set = set()
+    out = []
+    for name, dim in zip(logical_axes, dim_sizes):
+        if name is None:
+            out.append(None)
+            continue
+        chosen: Candidate = None
+        for cand in rules.candidates(name):
+            if cand is None:
+                chosen = None
+                break
+            names = (cand,) if isinstance(cand, str) else tuple(cand)
+            size = _axis_size(mesh, names)
+            if size <= 0 or any(n in used for n in names):
+                continue
+            if dim % size == 0:
+                chosen = names if len(names) > 1 else names[0]
+                used.update(names)
+                break
+        out.append(chosen)
+    return P(*out)
+
+
+def make_sharding(
+    logical_axes: Sequence[Optional[str]],
+    dim_sizes: Sequence[int],
+    mesh: Mesh,
+    rules: AxisRules = DEFAULT_RULES,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, dim_sizes, mesh, rules))
+
+
+def spec_tree(param_axes, params_shape, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Map a pytree of logical-axis tuples + matching shapes to shardings.
+
+    `param_axes` leaves are tuples of logical names; `params_shape` leaves
+    are ShapeDtypeStruct (or arrays). Returns a matching NamedSharding tree.
+    """
+
+    def one(axes, shaped):
+        shape = shaped.shape
+        if len(axes) != len(shape):
+            raise ValueError(f"axes {axes} do not match shape {shape}")
+        return make_sharding(axes, shape, mesh, rules)
+
+    return jax.tree_util.tree_map(
+        one, param_axes, params_shape,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def shard_activation(
+    x: jax.Array,
+    logical_axes: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+    rules: AxisRules = DEFAULT_RULES,
+) -> jax.Array:
+    """with_sharding_constraint using logical names; no-op outside jit/mesh."""
+    if mesh is None:
+        mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = logical_to_spec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        env = jax._src.mesh.thread_resources.env  # type: ignore[attr-defined]
+        mesh = env.physical_mesh
+        return mesh
+    except Exception:
+        return None
+
+
+def model_axis_size(mesh: Optional[Mesh] = None) -> int:
+    if mesh is None:
+        mesh = _current_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.shape:
+        return 1
+    return mesh.shape["model"]
+
+
+def attn_q_axes(n_heads: int) -> "tuple[Optional[str], ...]":
+    """Activation axes for (B, S, H, D) attention tensors.
+
+    Heads shard over the model axis when divisible (TP attention);
+    otherwise the query sequence carries the model axis instead
+    (sequence-parallel attention with XLA-gathered KV) — this is what
+    keeps phi3 (40H), minicpm (36H) and llava (56H) score tensors
+    sharded on the 16-wide axis.
+    """
+    if n_heads % max(model_axis_size(), 1) == 0:
+        return ("act_batch", "act_seq", "act_heads", None)
+    return ("act_batch", "act_seq_sp", None, None)

@@ -1,0 +1,2 @@
+from repro.train.loop import TrainConfig, Trainer, make_train_step  # noqa: F401
+from repro.train.fault import ElasticPlan, StragglerWatchdog, plan_mesh  # noqa: F401

@@ -1,0 +1,116 @@
+"""Fault-tolerance utilities: straggler detection and elastic re-meshing.
+
+StragglerWatchdog — EMA step-time monitor. In multi-host SPMD a slow host
+stalls every step (lockstep collectives), so persistent step-time
+inflation *is* the straggler signal observable from any host; the
+watchdog flags it and (per policy) recommends checkpoint-and-remesh.
+Data-level hedging (prefetch depth) covers input-pipeline stragglers.
+
+plan_mesh — elastic re-meshing: given a degraded device count, pick the
+largest usable (data, model) factorisation (keeping the model axis if
+possible, since parameter layouts depend on it), report the devices to
+drop, and feed CheckpointManager.restore(shardings=new) to resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags steps slower than `threshold` x the EMA step time."""
+
+    threshold: float = 2.0
+    ema_decay: float = 0.9
+    warmup_steps: int = 5
+    _ema: Optional[float] = None
+    _count: int = 0
+    slow_steps: int = 0
+    consecutive_slow: int = 0
+
+    def record(self, step_time: float) -> bool:
+        """Record one step; returns True if this step was a straggler."""
+        self._count += 1
+        if self._ema is None:
+            self._ema = step_time
+            return False
+        slow = (
+            self._count > self.warmup_steps
+            and step_time > self.threshold * self._ema
+        )
+        if slow:
+            self.slow_steps += 1
+            self.consecutive_slow += 1
+        else:
+            self.consecutive_slow = 0
+            # Only fold healthy steps into the EMA so a degrading host
+            # cannot normalise itself away.
+            self._ema = self.ema_decay * self._ema + (1 - self.ema_decay) * step_time
+        return slow
+
+    @property
+    def should_remesh(self) -> bool:
+        """Persistent degradation: recommend checkpoint + elastic restart."""
+        return self.consecutive_slow >= 10
+
+    @property
+    def ema(self) -> Optional[float]:
+        return self._ema
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    pod: int
+    used_devices: int
+    dropped_devices: int
+
+    @property
+    def axes(self):
+        if self.pod > 1:
+            return {"pod": self.pod, "data": self.data, "model": self.model}
+        return {"data": self.data, "model": self.model}
+
+
+def plan_mesh(
+    n_devices: int,
+    *,
+    prefer_model: int = 16,
+    pods: int = 1,
+) -> ElasticPlan:
+    """Largest usable (pod, data, model) mesh for a degraded device pool.
+
+    Keeps the model axis at `prefer_model` if possible (parameter TP
+    layouts survive restarts); shrinks it to the largest power-of-two
+    divisor otherwise. Remaining devices go to data parallelism; any
+    non-factorable remainder is dropped (hot spares).
+    """
+    if n_devices < 1:
+        raise ValueError("need at least one device")
+    per_pod = n_devices // pods
+    model = prefer_model
+    while model > 1 and per_pod // model < 1:
+        model //= 2
+    data = max(1, per_pod // model)
+    used = pods * data * model
+    return ElasticPlan(
+        data=data,
+        model=model,
+        pod=pods,
+        used_devices=used,
+        dropped_devices=n_devices - used,
+    )
+
+
+class Heartbeat:
+    """Simple liveness marker for external orchestrators (file mtime)."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def beat(self, step: int):
+        with open(self.path, "w") as f:
+            f.write(f"{step} {time.time()}\n")

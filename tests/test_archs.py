@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (reduced configs, CPU, 1 device).
+
+For each assigned arch: instantiate the reduced same-family config, run
+one forward/train step, assert output shapes and finiteness; check the
+param tree and the logical-axes tree match; validate decode-vs-forward
+consistency (capacity-dropping neutralised for MoE archs).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.models import build_model
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.modality_prefix, cfg.d_model), jnp.float32
+        )
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_reduced_train_step(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(model.loss_fn, has_aux=True)
+    )(params, batch)
+    assert jnp.isfinite(loss), f"{name}: loss not finite"
+    assert float(loss) > 0
+    # Gradients exist, are finite, and match the param tree.
+    gflat, _ = jax.tree_util.tree_flatten(grads)
+    pflat, _ = jax.tree_util.tree_flatten(params)
+    assert len(gflat) == len(pflat)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in gflat), name
+    # Forward logits shape.
+    logits, aux = model.forward(params, batch)
+    s_expect = batch["tokens"].shape[1] + (
+        cfg.modality_prefix if cfg.family == "vlm" else 0
+    )
+    assert logits.shape == (2, s_expect, cfg.vocab)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_param_axes_tree_matches(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    axes = model.param_axes()
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    pt = jax.tree_util.tree_structure(jax.tree_util.tree_map(lambda x: 0, params))
+    at = jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda x: 0, axes, is_leaf=is_axes_leaf)
+    )
+    assert pt == at, f"{name}: param/axes tree mismatch"
+    # Rank agreement per leaf.
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_a, _ = jax.tree_util.tree_flatten(axes, is_leaf=is_axes_leaf)
+    for p, a in zip(flat_p, flat_a):
+        assert len(a) == p.ndim, f"{name}: {a} vs {p.shape}"
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_decode_matches_forward(name):
+    cfg = get_config(name).reduced()
+    if cfg.moe_enabled:
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)  # no drops
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 12
+    batch = make_batch(cfg, B, S, seed=1)
+    logits_full, _ = model.forward(params, batch)
+    prefix = cfg.modality_prefix if cfg.family == "vlm" else 0
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    pre["tokens"] = batch["tokens"][:, : S - 1]
+    lg_pre, cache = model.prefill(params, pre, cache_len=S + prefix + 4)
+    lg_dec, cache2 = model.decode_step(
+        params, cache, batch["tokens"][:, S - 1 : S]
+    )
+    ref_last = np.asarray(logits_full[:, -1])
+    got = np.asarray(lg_dec[:, 0])
+    rel = np.max(np.abs(got - ref_last)) / (np.max(np.abs(ref_last)) + 1e-9)
+    assert rel < 1e-4, f"{name}: decode diverges from forward ({rel:.2e})"
+    assert int(cache2["pos"][0]) == S + prefix
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_multi_step_decode(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(2))
+    B = 2
+    prefix = cfg.modality_prefix if cfg.family == "vlm" else 0
+    batch = make_batch(cfg, B, 8, seed=2)
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    _, cache = model.prefill(params, pre, cache_len=prefix + 16)
+    step = jax.jit(model.decode_step)
+    tok = batch["tokens"][:, -1:]
+    for _ in range(4):
+        logits, cache = step(params, cache, tok)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert int(cache["pos"][0]) == prefix + 12
+
+
+def test_n_params_estimates():
+    """Printed parameter counts should be in the right ballpark."""
+    approx = {
+        "yi-9b": (8e9, 10e9),
+        "deepseek-v3-671b": (6e11, 7.5e11),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "jamba-1.5-large-398b": (3.2e11, 4.6e11),
+        "minicpm-2b": (2e9, 3.3e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = get_config(name).n_params()
+        assert lo <= n <= hi, f"{name}: {n:.3e} not in [{lo:.1e}, {hi:.1e}]"
+
+
+def test_moe_active_params():
+    ds = get_config("deepseek-v3-671b")
+    active = ds.n_active_params()
+    assert 3e10 <= active <= 4.5e10, active  # ~37B active
+    k2 = get_config("kimi-k2-1t-a32b")
+    assert 2.5e10 <= k2.n_active_params() <= 4e10  # ~32B active
+
+
+def test_registry():
+    from repro.configs.registry import get_config as gc, list_archs
+
+    assert len(list_archs()) == 10
+    assert gc("yi_9b").name == "yi-9b"
+    with pytest.raises(KeyError):
+        gc("nope")
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1

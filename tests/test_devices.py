@@ -1,0 +1,57 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.devices import (
+    CBRAM, MRAM, PCM, RRAM, DeviceTech, custom_tech, get_tech,
+)
+
+
+def test_table_iv_values():
+    # Exact R_low/R_high pairs from paper Table IV.
+    assert (MRAM.r_low, MRAM.r_high) == (8.5e3, 25.5e3)
+    assert (RRAM.r_low, RRAM.r_high) == (2.5e3, 100e3)
+    assert (CBRAM.r_low, CBRAM.r_high) == (5e3, 1e6)
+    assert (PCM.r_low, PCM.r_high) == (50e3, 1e6)
+
+
+def test_conductance_range():
+    assert MRAM.g_on == pytest.approx(1 / 8.5e3)
+    assert MRAM.g_off == pytest.approx(1 / 25.5e3)
+    assert PCM.on_off_ratio == pytest.approx(20.0)
+
+
+def test_quantize_levels():
+    tech = custom_tech(1e3, 1e6, levels=4)
+    g = jnp.linspace(tech.g_off, tech.g_on, 101)
+    q = tech.quantize(g)
+    uniq = jnp.unique(q)
+    assert uniq.shape[0] == 4
+    assert float(jnp.max(jnp.abs(q - g))) <= tech.g_range / 6 + 1e-12
+
+
+def test_quantize_continuous_passthrough():
+    g = jnp.linspace(MRAM.g_off, MRAM.g_on, 17)
+    assert jnp.allclose(MRAM.quantize(g), g)
+
+
+def test_perturb_bounds():
+    tech = custom_tech(1e3, 1e5, sigma_rel=0.5)
+    g = jnp.full((1000,), (tech.g_on + tech.g_off) / 2)
+    p = tech.perturb(jax.random.PRNGKey(0), g)
+    tol = 1e-6
+    assert float(p.min()) >= tech.g_off * (1 - tol)
+    assert float(p.max()) <= tech.g_on * (1 + tol)
+    assert not jnp.allclose(p, g)
+
+
+def test_get_tech():
+    assert get_tech("mram") is MRAM
+    assert get_tech(PCM) is PCM
+    with pytest.raises(KeyError):
+        get_tech("nosuch")
+
+
+def test_custom_tech_validation():
+    with pytest.raises(ValueError):
+        custom_tech(1e6, 1e3)

@@ -1,0 +1,59 @@
+import jax
+import pytest
+
+from repro.core import IMACConfig
+from repro.core.evaluate import test_imac as imac_eval  # alias: pytest must not collect it
+from repro.core.evaluate import sweep
+
+
+def test_testimac_end_to_end(trained_tiny_mlp):
+    params, xte, yte = trained_tiny_mlp
+    cfg = IMACConfig(tech="PCM", array_rows=32, array_cols=32)
+    res = imac_eval(params, xte, yte, cfg, n_samples=60, chunk=30)
+    assert res.n_samples == 60
+    assert res.digital_accuracy > 0.9
+    assert res.accuracy > 0.8  # PCM, small tiles: near-digital
+    assert res.avg_power > 0
+    assert res.latency >= cfg.t_sampling
+    assert res.worst_residual < 1e-3
+    assert len(res.per_layer_power) == 3
+    assert res.error_rate == pytest.approx(1.0 - res.accuracy)
+
+
+def test_partitioning_arithmetic_in_result(trained_tiny_mlp):
+    params, xte, yte = trained_tiny_mlp
+    cfg = IMACConfig(tech="PCM", array_rows=64, array_cols=64)
+    res = imac_eval(params, xte, yte, cfg, n_samples=20, chunk=20)
+    # topology [400, 48, 24, 10] on 64x64 arrays: ceil(401/64)=7, etc.
+    assert res.hp == (7, 1, 1)
+    assert res.vp == (1, 1, 1)
+
+
+def test_large_array_accuracy_collapse(trained_tiny_mlp):
+    """Paper Table III: monolithic large arrays collapse to ~chance."""
+    params, xte, yte = trained_tiny_mlp
+    good = imac_eval(
+        params, xte, yte,
+        IMACConfig(tech="MRAM", array_rows=32, array_cols=32),
+        n_samples=40, chunk=20,
+    )
+    bad = imac_eval(
+        params, xte, yte,
+        IMACConfig(tech="MRAM", hp=[1, 1, 1], vp=[1, 1, 1]),
+        n_samples=40, chunk=20,
+    )
+    assert good.accuracy > bad.accuracy
+    assert bad.accuracy < 0.5  # collapsed
+    assert bad.avg_power < good.avg_power  # voltages collapse => less power
+
+
+def test_sweep_api(trained_tiny_mlp):
+    params, xte, yte = trained_tiny_mlp
+    cfgs = [
+        ("pcm32", IMACConfig(tech="PCM", array_rows=32, array_cols=32)),
+        ("mram32", IMACConfig(tech="MRAM", array_rows=32, array_cols=32)),
+    ]
+    out = sweep(params, xte, yte, cfgs, n_samples=20, chunk=20)
+    assert [name for name, _ in out] == ["pcm32", "mram32"]
+    # PCM (high R) dissipates less than MRAM (low R) — Table IV trend.
+    assert out[0][1].avg_power < out[1][1].avg_power

@@ -1,0 +1,119 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.digital import mlp_forward
+from repro.core.imac import IMACConfig, IMACNetwork
+from repro.core.interconnect import Interconnect
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    sizes = [(10, 8), (8, 6), (6, 4)]
+    return [
+        (0.5 * jax.random.normal(k, s), 0.1 * jax.random.normal(k, (s[1],)))
+        for k, s in zip(ks, sizes)
+    ]
+
+
+def test_ideal_mode_matches_digital(tiny_params):
+    """parasitics=False + continuous conductances == digital forward."""
+    cfg = IMACConfig(
+        tech="PCM", parasitics=False, quantize=False, array_rows=8, array_cols=8
+    )
+    net = IMACNetwork(tiny_params, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (9, 10))
+    out, stats = net(x)
+    ref = mlp_forward(tiny_params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-4)
+
+
+def test_parasitic_mode_close_but_degraded(tiny_params):
+    cfg = IMACConfig(tech="PCM", array_rows=8, array_cols=8, quantize=False)
+    net = IMACNetwork(tiny_params, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (5, 10))
+    out, stats = net(x)
+    ref = mlp_forward(tiny_params, x)
+    # Close (PCM high-R, small tiles) but NOT identical (parasitics).
+    assert float(jnp.max(jnp.abs(out - ref))) < 0.5
+    assert float(jnp.max(jnp.abs(out - ref))) > 1e-6
+    assert all(float(jnp.max(s.residual)) < 1e-4 for s in stats)
+
+
+def test_degradation_monotone_in_wire_resistance(tiny_params):
+    """Fidelity to the digital model decays as wires get worse."""
+    x = jax.random.uniform(jax.random.PRNGKey(3), (8, 10))
+    ref = mlp_forward(tiny_params, x)
+    errs = []
+    for rho_scale in [0.1, 1.0, 10.0, 50.0]:
+        ic = Interconnect(resistivity=1.9e-8 * rho_scale)
+        cfg = IMACConfig(
+            tech="MRAM", array_rows=8, array_cols=8, interconnect=ic,
+            quantize=False,
+        )
+        net = IMACNetwork(tiny_params, cfg)
+        out, _ = net(x)
+        errs.append(float(jnp.mean(jnp.abs(out - ref))))
+    assert errs == sorted(errs), errs
+
+
+def test_power_increases_with_partitioning(tiny_params):
+    """Paper Table III trend: more partitions => more power."""
+    x = jax.random.uniform(jax.random.PRNGKey(4), (8, 10))
+    powers = []
+    for hp, vp in [([1, 1, 1], [1, 1, 1]), ([4, 3, 3], [3, 2, 2])]:
+        cfg = IMACConfig(tech="MRAM", hp=hp, vp=vp, array_rows=16, array_cols=16)
+        net = IMACNetwork(tiny_params, cfg)
+        _, stats = net(x)
+        powers.append(float(net.total_power(stats)))
+    assert powers[1] > powers[0], powers
+
+
+def test_accuracy_improves_with_partitioning(tiny_params):
+    """Paper Table III trend: more partitions => closer to digital."""
+    x = jax.random.uniform(jax.random.PRNGKey(5), (8, 10))
+    ref = mlp_forward(tiny_params, x)
+    # Stress wires so the difference is visible on a tiny network.
+    ic = Interconnect(resistivity=1.9e-7)
+    errs = []
+    for hp, vp in [([1, 1, 1], [1, 1, 1]), ([4, 3, 3], [3, 2, 2])]:
+        cfg = IMACConfig(
+            tech="MRAM", hp=hp, vp=vp, array_rows=16, array_cols=16,
+            interconnect=ic, quantize=False,
+        )
+        net = IMACNetwork(tiny_params, cfg)
+        out, _ = net(x)
+        errs.append(float(jnp.mean(jnp.abs(out - ref))))
+    assert errs[1] < errs[0], errs
+
+
+def test_noise_injection(tiny_params):
+    cfg = IMACConfig(tech="PCM", parasitics=False, array_rows=8, array_cols=8)
+    tech = dataclasses.replace(cfg.resolved_tech(), read_noise_rel=0.05)
+    cfg = dataclasses.replace(cfg, tech=tech)
+    net = IMACNetwork(tiny_params, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(6), (4, 10))
+    o1, _ = net(x, noise_key=jax.random.PRNGKey(10))
+    o2, _ = net(x, noise_key=jax.random.PRNGKey(11))
+    o3, _ = net(x, noise_key=jax.random.PRNGKey(10))
+    assert not jnp.allclose(o1, o2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3))
+
+
+def test_latency_structure(tiny_params):
+    cfg = IMACConfig(tech="MRAM", array_rows=8, array_cols=8)
+    net = IMACNetwork(tiny_params, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(8), (2, 10))
+    _, stats = net(x)
+    lat = float(net.total_latency(stats))
+    assert lat >= cfg.t_sampling
+    # Bigger arrays (fewer partitions) -> longer lines -> more latency.
+    cfg_big = IMACConfig(tech="MRAM", hp=[1, 1, 1], vp=[1, 1, 1])
+    net_big = IMACNetwork(tiny_params, cfg_big)
+    _, stats_big = net_big(x)
+    assert float(net_big.total_latency(stats_big)) >= lat

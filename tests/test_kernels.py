@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps, interpret=True vs the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.imac_mvm.ops import analog_linear, imac_mvm
+from repro.kernels.imac_mvm.ref import imac_mvm_ref
+from repro.kernels.tridiag.ops import tridiag
+from repro.kernels.tridiag.ref import tridiag_ref
+
+# ----------------------------------------------------------------- tridiag
+
+
+@pytest.mark.parametrize("shape", [(1, 4), (7, 16), (3, 5, 33), (260, 8), (2, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_tridiag_shapes(shape, dtype):
+    key = jax.random.PRNGKey(sum(shape))
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = (2.0 + jax.random.uniform(k1, shape)).astype(dtype)
+    dl = (-jax.random.uniform(k2, shape)).astype(dtype)
+    du = (-jax.random.uniform(k3, shape)).astype(dtype)
+    b = jax.random.normal(k4, shape).astype(dtype)
+    x = tridiag(dl, d, du, b, interpret=True)
+    want = tridiag_ref(dl, d, du, b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 40))
+def test_tridiag_property_random_dd_systems(n, batch):
+    """Diagonally-dominant systems: kernel == oracle == dense solve."""
+    key = jax.random.PRNGKey(n * 131 + batch)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    shape = (batch, n)
+    dl = -jax.random.uniform(k1, shape)
+    du = -jax.random.uniform(k2, shape)
+    d = 2.2 + jax.random.uniform(k3, shape)
+    b = jax.random.normal(k4, shape)
+    x = tridiag(dl, d, du, b, interpret=True)
+    # Verify against the dense system directly (independent oracle).
+    for bi in range(min(batch, 3)):
+        a = np.diag(np.asarray(d[bi]))
+        a += np.diag(np.asarray(dl[bi, 1:]), -1)
+        a += np.diag(np.asarray(du[bi, :-1]), 1)
+        want = np.linalg.solve(a, np.asarray(b[bi]))
+        np.testing.assert_allclose(np.asarray(x[bi]), want, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------- imac_mvm
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(1, 1, 1), (4, 7, 5), (130, 257, 96), (128, 128, 128), (256, 64, 33)]
+)
+def test_imac_mvm_shapes(m, k, n):
+    x = jax.random.uniform(jax.random.PRNGKey(1), (m, k))
+    w = jax.random.uniform(jax.random.PRNGKey(2), (k, n), minval=-1, maxval=1)
+    got = imac_mvm(x, w, dac_bits=8, levels=16, interpret=True)
+    want = imac_mvm_ref(x, w, dac_bits=8, levels=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dac_bits,levels", [(0, 1), (4, 4), (8, 16), (2, 32)])
+def test_imac_mvm_quantization_params(dac_bits, levels):
+    x = jax.random.uniform(jax.random.PRNGKey(3), (17, 40))
+    w = jax.random.uniform(jax.random.PRNGKey(4), (40, 9), minval=-1, maxval=1)
+    got = imac_mvm(x, w, dac_bits=dac_bits, levels=levels, interpret=True)
+    want = imac_mvm_ref(x, w, dac_bits=dac_bits, levels=levels)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_imac_mvm_batch_dims():
+    x = jax.random.uniform(jax.random.PRNGKey(5), (3, 5, 20))
+    w = jax.random.uniform(jax.random.PRNGKey(6), (20, 8), minval=-1, maxval=1)
+    got = imac_mvm(x, w, interpret=True)
+    assert got.shape == (3, 5, 8)
+    want = imac_mvm_ref(x.reshape(15, 20), w).reshape(3, 5, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_analog_linear_approximates_digital():
+    """High-resolution analog linear ≈ digital y = xW + b."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (6, 32))
+    w = 0.3 * jax.random.normal(jax.random.PRNGKey(8), (32, 16))
+    b = 0.1 * jax.random.normal(jax.random.PRNGKey(9), (16,))
+    y = analog_linear(x, w, b, tech="PCM", dac_bits=12, levels=256, interpret=True)
+    want = x @ w + b
+    err = float(jnp.max(jnp.abs(y - want)) / (jnp.max(jnp.abs(want)) + 1e-9))
+    assert err < 0.05, err
+
+
+# --------------------------------------------------------- decode_attention
+
+
+@pytest.mark.parametrize(
+    "b,h,hkv,s,dk,dv",
+    [
+        (2, 8, 2, 256, 64, 64),     # GQA
+        (1, 16, 1, 512, 128, 96),   # MQA, Dk != Dv (MLA-style)
+        (2, 4, 4, 128, 64, 64),     # MHA
+        (1, 4, 2, 640, 128, 128),   # non-power-of-two S
+    ],
+)
+def test_decode_attention_shapes(b, h, hkv, s, dk, dv):
+    kq, kk, kv, kl = jax.random.split(jax.random.PRNGKey(b * 100 + s), 4)
+    q = jax.random.normal(kq, (b, h, dk), jnp.float32)
+    k = jax.random.normal(kk, (b, s, hkv, dk), jnp.float32)
+    v = jax.random.normal(kv, (b, s, hkv, dv), jnp.float32)
+    lens = jax.random.randint(kl, (b,), 1, s + 1)
+    got = decode_attention(q, k, v, lens, bs=128, interpret=True)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_dtypes(dtype):
+    b, h, hkv, s, d = 2, 8, 4, 256, 64
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (b, h, d)).astype(dtype)
+    k = jax.random.normal(kk, (b, s, hkv, d)).astype(dtype)
+    v = jax.random.normal(kv, (b, s, hkv, d)).astype(dtype)
+    got = decode_attention(q, k, v, bs=128, interpret=True)
+    want = decode_attention_ref(q, k, v)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_decode_attention_full_cache_equals_no_mask():
+    b, h, hkv, s, d = 1, 4, 2, 256, 64
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(kq, (b, h, d))
+    k = jax.random.normal(kk, (b, s, hkv, d))
+    v = jax.random.normal(kv, (b, s, hkv, d))
+    a = decode_attention(q, k, v, jnp.array([s]), bs=64, interpret=True)
+    c = decode_attention(q, k, v, None, bs=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5)

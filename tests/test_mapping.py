@@ -1,0 +1,89 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.devices import MRAM, PCM, custom_tech
+from repro.core.mapping import map_network, map_wb
+
+
+def _rand_layer(key, fan_in=12, fan_out=7):
+    kw, kb = jax.random.split(key)
+    w = jax.random.normal(kw, (fan_in, fan_out))
+    b = jax.random.normal(kb, (fan_out,))
+    return w, b
+
+
+def test_differential_mapping_exact():
+    w, b = _rand_layer(jax.random.PRNGKey(0))
+    m = map_wb(w, b, PCM, v_unit=0.8, quantize=False)
+    wb = jnp.concatenate([w, b[None]], axis=0)
+    np.testing.assert_allclose(
+        np.asarray(m.effective_weights()), np.asarray(wb), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_conductance_bounds():
+    w, b = _rand_layer(jax.random.PRNGKey(1))
+    m = map_wb(w, b, MRAM, v_unit=0.8)
+    for g in (m.g_pos, m.g_neg):
+        assert float(g.min()) >= MRAM.g_off * (1 - 1e-6)
+        assert float(g.max()) <= MRAM.g_on * (1 + 1e-6)
+
+
+def test_one_side_at_goff():
+    """Differential scheme: for each weight, at least one side is G_off."""
+    w, b = _rand_layer(jax.random.PRNGKey(2))
+    m = map_wb(w, b, MRAM, v_unit=0.8, quantize=False)
+    lo = jnp.minimum(m.g_pos, m.g_neg)
+    np.testing.assert_allclose(np.asarray(lo), MRAM.g_off, rtol=1e-6)
+
+
+def test_ideal_current_recovers_preactivation():
+    """z = I_diff / (k v_unit) must equal W^T a + b for ideal crossbars."""
+    w, b = _rand_layer(jax.random.PRNGKey(3))
+    m = map_wb(w, b, PCM, v_unit=0.8, quantize=False)
+    a = jax.random.uniform(jax.random.PRNGKey(4), (5, w.shape[0]))
+    v = jnp.concatenate([a, jnp.ones((5, 1))], axis=1) * m.v_unit
+    i_diff = v @ (m.g_pos - m.g_neg)
+    z = i_diff / (m.k * m.v_unit)
+    np.testing.assert_allclose(
+        np.asarray(z), np.asarray(a @ w + b), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=20),
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=2, max_value=32),
+)
+def test_quantization_error_bounded(fan_in, fan_out, levels):
+    """Property: quantised effective weights deviate <= half a level."""
+    tech = custom_tech(1e3, 1e6, levels=levels)
+    key = jax.random.PRNGKey(fan_in * 131 + fan_out)
+    w, b = _rand_layer(key, fan_in, fan_out)
+    m = map_wb(w, b, tech, v_unit=0.8, quantize=True)
+    wb = jnp.concatenate([w, b[None]], axis=0)
+    step_w = m.w_scale / (levels - 1)
+    err = jnp.max(jnp.abs(m.effective_weights() - wb))
+    assert float(err) <= step_w / 2 + 1e-6 * m.w_scale
+
+
+def test_map_network_shapes():
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    params = [_rand_layer(k, 8, 6) for k in keys[:1]] + [
+        _rand_layer(keys[1], 6, 4), _rand_layer(keys[2], 4, 3)
+    ]
+    mapped = map_network(params, PCM, v_unit=0.8)
+    assert [m.fan_in for m in mapped] == [8, 6, 4]
+    assert [m.fan_out for m in mapped] == [6, 4, 3]
+
+
+def test_zero_weights():
+    w = jnp.zeros((4, 3))
+    b = jnp.zeros((3,))
+    m = map_wb(w, b, MRAM, v_unit=0.8)
+    np.testing.assert_allclose(np.asarray(m.g_pos), MRAM.g_off)
+    np.testing.assert_allclose(np.asarray(m.g_neg), MRAM.g_off)

@@ -1,0 +1,103 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.devices import MRAM
+from repro.core.imac import IMACConfig, build_plans
+from repro.core.mapping import map_network
+from repro.core.netlist import (
+    map_imac,
+    map_layer,
+    netlist_stats,
+    parse_tile_conductances,
+)
+from repro.core.partition import tile_matrix
+from repro.core.solver import CircuitParams, solve_dense_mna
+
+
+@pytest.fixture(scope="module")
+def small_net():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = [
+        (jax.random.normal(k1, (6, 4)), jnp.zeros((4,))),
+        (jax.random.normal(k2, (4, 3)), jnp.zeros((3,))),
+    ]
+    cfg = IMACConfig(tech="MRAM", array_rows=4, array_cols=4)
+    topology = [6, 4, 3]
+    mapped = map_network(params, MRAM, v_unit=cfg.vdd)
+    plans = build_plans(topology, cfg)
+    return cfg, mapped, plans
+
+
+def test_layer_subckt_structure(small_net):
+    cfg, mapped, plans = small_net
+    text = map_layer(0, mapped[0], plans[0], cfg)
+    assert text.startswith("* Layer 0")
+    assert ".SUBCKT layer0" in text and ".ENDS layer0" in text
+    # 7 input nodes (6 + bias) and 4 outputs in the port list.
+    ports = text.split(".SUBCKT layer0 ")[1].split("\n")[0].split()
+    assert ports[:7] == [f"in_{i}" for i in range(7)]
+    assert ports[7:] == [f"out_{j}" for j in range(4)]
+
+
+def test_netlist_roundtrip_conductances(small_net):
+    """Parse the netlist back and compare to the mapped tile stacks."""
+    cfg, mapped, plans = small_net
+    for li in range(2):
+        text = map_layer(li, mapped[li], plans[li], cfg)
+        gp, gn = parse_tile_conductances(text, plans[li])
+        want_p = np.asarray(tile_matrix(mapped[li].g_pos, plans[li]))
+        want_n = np.asarray(tile_matrix(mapped[li].g_neg, plans[li]))
+        np.testing.assert_allclose(gp, want_p, rtol=1e-4)
+        np.testing.assert_allclose(gn, want_n, rtol=1e-4)
+
+
+def test_netlist_solver_agreement(small_net):
+    """Netlist-parsed conductances solved by the MNA oracle must match the
+    direct solver output — netlist ⇄ simulator consistency."""
+    from repro.core.solver import solve_crossbar
+
+    cfg, mapped, plans = small_net
+    text = map_layer(0, mapped[0], plans[0], cfg)
+    gp, _ = parse_tile_conductances(text, plans[0])
+    cp = cfg.circuit_params(plans[0].rows, plans[0].cols)
+    v = jnp.linspace(0.1, 0.8, plans[0].rows)
+    for t in range(plans[0].n_tiles):
+        oracle = solve_dense_mna(jnp.asarray(gp[t]), v, cp)
+        fast = solve_crossbar(jnp.asarray(gp[t]), v, cp)
+        np.testing.assert_allclose(
+            np.asarray(fast.i_out), np.asarray(oracle.i_out), rtol=1e-3
+        )
+
+
+def test_map_imac_main_file(small_net):
+    cfg, mapped, plans = small_net
+    files = map_imac(mapped, plans, cfg, sample=np.linspace(0, 1, 6))
+    assert set(files) == {"layer0.sp", "layer1.sp", "imac_main.sp"}
+    main = files["imac_main.sp"]
+    assert ".INCLUDE 'layer0.sp'" in main
+    assert ".INCLUDE 'layer1.sp'" in main
+    assert "Xlayer0" in main and "Xlayer1" in main
+    assert ".TRAN" in main and main.rstrip().endswith(".END")
+    # Input sources for every pixel + bias per layer.
+    assert main.count("Vin_") == 6
+    assert main.count("Vbias_") == 2
+
+
+def test_netlist_stats(small_net):
+    cfg, mapped, plans = small_net
+    files = map_imac(mapped, plans, cfg)
+    stats = netlist_stats(files)
+    assert stats["subckts"] == 2
+    assert stats["esources"] == 7  # 4 + 3 neurons
+    # Every mapped device appears (g_off > 0 everywhere -> no padding holes
+    # except the actual pad cells).
+    n_devices = sum(
+        int((np.asarray(tile_matrix(m.g_pos, p)) > 0).sum())
+        + int((np.asarray(tile_matrix(m.g_neg, p)) > 0).sum())
+        for m, p in zip(mapped, plans)
+    )
+    text = files["layer0.sp"] + files["layer1.sp"]
+    assert text.count("Rmem_") == n_devices

@@ -1,0 +1,140 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.devices import MRAM, PCM, RRAM
+from repro.core.solver import (
+    CircuitParams,
+    crossbar_power,
+    solve_crossbar,
+    solve_dense_mna,
+    solve_ideal,
+    suggest_iters,
+    tridiag_scan,
+)
+
+CP = CircuitParams(r_row=13.8, r_col=13.8, gs_iters=64)
+
+
+def _random_tile(key, m, n, tech=MRAM):
+    kg, kv = jax.random.split(key)
+    g = jax.random.uniform(kg, (m, n), minval=tech.g_off, maxval=tech.g_on)
+    v = jax.random.uniform(kv, (m,), minval=0.0, maxval=0.8)
+    return g, v
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (1, 8), (8, 1), (5, 7), (16, 12)])
+def test_matches_dense_mna(m, n):
+    g, v = _random_tile(jax.random.PRNGKey(m * 100 + n), m, n)
+    oracle = solve_dense_mna(g, v, CP)
+    fast = solve_crossbar(g, v, CP)
+    np.testing.assert_allclose(
+        np.asarray(fast.i_out), np.asarray(oracle.i_out), rtol=5e-4, atol=1e-9
+    )
+    np.testing.assert_allclose(
+        np.asarray(fast.vc), np.asarray(oracle.vc), rtol=5e-3, atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=1, max_value=12),
+    st.sampled_from([MRAM, RRAM, PCM]),
+)
+def test_property_matches_oracle(m, n, tech):
+    g, v = _random_tile(jax.random.PRNGKey(m * 31 + n), m, n, tech)
+    oracle = solve_dense_mna(g, v, CP)
+    fast = solve_crossbar(g, v, CP)
+    np.testing.assert_allclose(
+        np.asarray(fast.i_out), np.asarray(oracle.i_out), rtol=1e-3, atol=1e-9
+    )
+
+
+def test_near_zero_wire_resistance_approaches_ideal():
+    g, v = _random_tile(jax.random.PRNGKey(0), 12, 9)
+    cp = CircuitParams(r_row=1e-4, r_col=1e-4, r_source=1e-4, r_tia=1e-4, gs_iters=80)
+    sol = solve_crossbar(g, v, cp)
+    ideal = solve_ideal(g, v)
+    np.testing.assert_allclose(np.asarray(sol.i_out), np.asarray(ideal), rtol=1e-4)
+
+
+def test_ir_drop_reduces_current():
+    """Physics: parasitic wires can only lose current vs ideal."""
+    g, v = _random_tile(jax.random.PRNGKey(1), 24, 24)
+    sol = solve_crossbar(g, v, CP)
+    ideal = solve_ideal(g, v)
+    assert bool(jnp.all(sol.i_out <= ideal + 1e-9))
+    assert bool(jnp.all(sol.i_out >= 0))
+
+
+def test_monotone_in_wire_resistance():
+    """More wire resistance => strictly less output current."""
+    g, v = _random_tile(jax.random.PRNGKey(2), 16, 16)
+    currents = []
+    for r in [1.0, 10.0, 50.0, 200.0]:
+        cp = CircuitParams(r_row=r, r_col=r, gs_iters=128)
+        currents.append(float(jnp.sum(solve_crossbar(g, v, cp).i_out)))
+    assert currents == sorted(currents, reverse=True)
+
+
+def test_batch_broadcasting():
+    g, _ = _random_tile(jax.random.PRNGKey(3), 6, 5)
+    v = jax.random.uniform(jax.random.PRNGKey(4), (4, 3, 6), maxval=0.8)
+    sol = solve_crossbar(g, v, CP)
+    assert sol.i_out.shape == (4, 3, 5)
+    one = solve_crossbar(g, v[2, 1], CP)
+    np.testing.assert_allclose(
+        np.asarray(sol.i_out[2, 1]), np.asarray(one.i_out), rtol=1e-5
+    )
+
+
+def test_power_matches_oracle():
+    g, v = _random_tile(jax.random.PRNGKey(5), 10, 8)
+    oracle = solve_dense_mna(g, v, CP)
+    fast = solve_crossbar(g, v, CP)
+    p_o = crossbar_power(g, v, oracle, CP)
+    p_f = crossbar_power(g, v, fast, CP)
+    np.testing.assert_allclose(float(p_f), float(p_o), rtol=1e-3)
+    # Power must not exceed the ideal upper bound sum(G V^2) + driver loss.
+    assert float(p_f) > 0
+
+
+def test_energy_conservation():
+    """Power delivered by sources == power dissipated in the network."""
+    g, v = _random_tile(jax.random.PRNGKey(6), 8, 6)
+    sol = solve_dense_mna(g, v, CP)
+    # Source power: sum over rows of V_in * I_in with I_in through r_source.
+    i_in = (v - sol.vr[:, 0]) * CP.g_source
+    p_delivered = float(jnp.sum(v * i_in))
+    p_dissipated = float(crossbar_power(g, v, sol, CP))
+    # crossbar_power includes the source-resistor dissipation, and
+    # delivered power counts it too (it is inside the network).
+    np.testing.assert_allclose(p_delivered, p_dissipated, rtol=1e-3)
+
+
+def test_suggest_iters_converges_512():
+    """The suggested sweep count converges the worst case (512x512 MRAM)."""
+    g, v = _random_tile(jax.random.PRNGKey(7), 512, 512)
+    it = suggest_iters(512, 512)
+    cp = CircuitParams(gs_iters=it)
+    ref_cp = CircuitParams(gs_iters=2 * it)
+    sol = solve_crossbar(g, v, cp)
+    ref = solve_crossbar(g, v, ref_cp)
+    rel = float(
+        jnp.max(jnp.abs(sol.i_out - ref.i_out)) / jnp.max(jnp.abs(ref.i_out))
+    )
+    assert rel < 5e-3, rel
+
+
+def test_pluggable_tridiag():
+    from repro.kernels.tridiag.ops import tridiag
+
+    g, v = _random_tile(jax.random.PRNGKey(8), 9, 11)
+    a = solve_crossbar(g, v, CP, tridiag=tridiag_scan)
+    b = solve_crossbar(g, v, CP, tridiag=lambda *args: tridiag(*args, interpret=True))
+    np.testing.assert_allclose(
+        np.asarray(a.i_out), np.asarray(b.i_out), rtol=1e-5
+    )
