@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 
   table3   — paper Table III (partitioning design space)
   table4   — paper Table IV (device technologies)
+  sweep    — batched exploration engine vs per-config loop (Table III x IV)
   solver   — crossbar circuit-solver scaling (the adapted SPICE engine)
   kernels  — Pallas kernel workloads (ref-path timings on CPU)
   deploy   — IMAC deployment planning for the 10 assigned archs
@@ -28,6 +29,7 @@ def main() -> None:
         kernels_bench,
         roofline_report,
         solver_scaling,
+        sweep_bench,
         table3_partitioning,
         table4_device_tech,
     )
@@ -35,6 +37,7 @@ def main() -> None:
     benches = {
         "table3": table3_partitioning.run,
         "table4": table4_device_tech.run,
+        "sweep": sweep_bench.run,
         "solver": solver_scaling.run,
         "kernels": kernels_bench.run,
         "deploy": deploy_report.run,

@@ -7,7 +7,6 @@ us/solve across array sizes and the dense-MNA crossover.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro.core.devices import MRAM

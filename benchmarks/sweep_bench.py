@@ -1,0 +1,189 @@
+"""Batched sweep engine vs the per-config loop on the Table III x IV grid.
+
+The design space is the cross product of the paper's partitioning
+configurations (Table III) and device technologies (Table IV): 24
+configurations, 6 traced structures.
+
+Three sweep implementations are timed:
+
+  * seed_per_config_loop — the pre-explore sweep path this PR replaces
+    (faithful reproduction of the seed `test_imac`): a fresh
+    IMACNetwork + jitted chunk solve re-traced and re-compiled for
+    every configuration, plus the per-config batch-1 structural-latency
+    solve and per-config digital reference it performed.
+  * lean_per_config_loop — `evaluate.sweep` today: per-config calls to
+    the shared `evaluate_batch` core (still one compile per config, but
+    no redundant latency solve).
+  * batched_engine — `repro.explore.run_sweep`: one vmap-free stacked
+    solve and ONE compilation per structure group (6 instead of 24),
+    with mapWB memoized across groups (4 mappings instead of 24).
+
+Emits wall-clock per path, engine speedups vs both loops, and a
+numerical cross-check that all paths agree. BENCH_SWEEP_SAMPLES
+(default 4) controls samples per evaluation — the regime a design-space
+sweep targets is many configurations x few samples, where per-config
+retracing dominates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, mnist_like_fixture
+from repro.configs.imac_mnist import TABLE_III_CONFIGS, TABLE_IV_CONFIGS
+from repro.core.digital import mlp_forward
+from repro.core.evaluate import IMACResult, sweep
+from repro.core.imac import IMACNetwork
+from repro.explore import pareto_front, run_sweep
+
+N_SWEEP_SAMPLES = int(os.environ.get("BENCH_SWEEP_SAMPLES", "4"))
+
+
+def cross_product():
+    """Table III partitioning x Table IV technology: 24 configurations."""
+    items = []
+    for part_name, part_cfg in TABLE_III_CONFIGS:
+        for tech_name, _ in TABLE_IV_CONFIGS:
+            items.append(
+                (
+                    f"{part_name}/{tech_name}",
+                    dataclasses.replace(part_cfg, tech=tech_name),
+                )
+            )
+    return items
+
+
+def _seed_test_imac(params, x, y, cfg, *, n_samples=None, chunk=256):
+    """The seed repo's per-config testIMAC, reproduced as the baseline.
+
+    Identical algorithm and outputs to the pre-explore code path:
+    IMACNetwork + per-config jitted chunk solve, an extra batch-1
+    forward for the latency estimate, and a per-config digital
+    reference pass.
+    """
+    n = n_samples or x.shape[0]
+    x, y = x[:n], y[:n]
+    net = IMACNetwork(params, cfg)
+
+    @jax.jit
+    def run_chunk(xb):
+        out, stats = net(xb)
+        pred = jnp.argmax(out, axis=-1)
+        return (
+            pred,
+            jnp.stack([jnp.mean(s.power) for s in stats]),
+            jnp.stack([s.residual for s in stats]),
+        )
+
+    preds, powers, residuals = [], [], []
+    n_chunks = (n + chunk - 1) // chunk
+    for ci in range(n_chunks):
+        xb = x[ci * chunk : (ci + 1) * chunk]
+        pred, pwr, res = run_chunk(xb)
+        preds.append(pred)
+        powers.append(pwr * xb.shape[0])
+        residuals.append(res)
+    pred = jnp.concatenate(preds)
+    per_layer_power = jnp.sum(jnp.stack(powers), axis=0) / n
+    worst_res = float(jnp.max(jnp.stack(residuals)))
+
+    errors = int(jnp.sum((pred != y).astype(jnp.int32)))
+    _, stats = net(x[:1])  # latency from a structural batch-1 forward
+    latency = float(net.total_latency(stats))
+    dig_pred = jnp.argmax(mlp_forward(params, x, "sigmoid"), axis=-1)
+    dig_acc = float(jnp.mean((dig_pred == y).astype(jnp.float32)))
+    return IMACResult(
+        accuracy=1.0 - errors / n,
+        error_rate=errors / n,
+        avg_power=float(jnp.sum(per_layer_power)),
+        latency=latency,
+        digital_accuracy=dig_acc,
+        per_layer_power=tuple(float(p) for p in per_layer_power),
+        worst_residual=worst_res,
+        n_samples=n,
+        hp=tuple(net.hp),
+        vp=tuple(net.vp),
+    )
+
+
+def _max_deltas(reference, results):
+    worst_acc = max(
+        abs(r1.accuracy - r2.result.accuracy)
+        for r1, r2 in zip(reference, results)
+    )
+    worst_pow = max(
+        abs(r1.avg_power - r2.result.avg_power) / max(r1.avg_power, 1e-12)
+        for r1, r2 in zip(reference, results)
+    )
+    return worst_acc, worst_pow
+
+
+def run():
+    params, xte, yte, _ = mnist_like_fixture()
+    items = cross_product()
+    n = N_SWEEP_SAMPLES
+
+    t0 = time.perf_counter()
+    seed_results = [
+        _seed_test_imac(params, xte, yte, cfg, n_samples=n, chunk=n)
+        for _, cfg in items
+    ]
+    t_seed = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    lean_results = sweep(params, xte, yte, items, n_samples=n, chunk=n)
+    t_lean = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    batched = run_sweep(params, xte, yte, items, n_samples=n, chunk=n)
+    t_batched = time.perf_counter() - t0
+
+    speedup_seed = t_seed / t_batched
+    speedup_lean = t_lean / t_batched
+    d_acc_seed, d_pow_seed = _max_deltas(seed_results, batched)
+    d_acc_lean, d_pow_lean = _max_deltas(
+        [r for _, r in lean_results], batched
+    )
+    emit(
+        "sweep/seed_per_config_loop",
+        t_seed / len(items) * 1e6,
+        f"total_s={t_seed:.2f};configs={len(items)};samples={n}",
+    )
+    emit(
+        "sweep/lean_per_config_loop",
+        t_lean / len(items) * 1e6,
+        f"total_s={t_lean:.2f};configs={len(items)};samples={n}",
+    )
+    emit(
+        "sweep/batched_engine",
+        t_batched / len(items) * 1e6,
+        f"total_s={t_batched:.2f};configs={len(items)};samples={n}",
+    )
+    emit(
+        "sweep/speedup_vs_seed_loop",
+        0.0,
+        f"x={speedup_seed:.2f};acc_delta={d_acc_seed:.2e};"
+        f"pow_rel_delta={d_pow_seed:.2e}",
+    )
+    emit(
+        "sweep/speedup_vs_lean_loop",
+        0.0,
+        f"x={speedup_lean:.2f};acc_delta={d_acc_lean:.2e};"
+        f"pow_rel_delta={d_pow_lean:.2e}",
+    )
+    front = pareto_front(batched)
+    emit("sweep/pareto_front", 0.0, ";".join(batched[i].name for i in front))
+    if speedup_seed < 3.0:
+        print(
+            f"WARNING: engine speedup {speedup_seed:.2f}x vs the seed "
+            f"per-config loop is below the 3x target"
+        )
+    return batched
+
+
+if __name__ == "__main__":
+    run()

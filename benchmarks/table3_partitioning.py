@@ -3,6 +3,10 @@
 Reproduces the array-size sweep (32x32 .. 512x512, auto H_P/V_P) plus
 the over-partitioned [16,8,8]/[8,8,1] row, reporting accuracy and
 average power for each configuration on the 400x120x84x10 MLP.
+
+Evaluated through the batched exploration engine (repro.explore); each
+partitioning is its own traced structure here, so the win over the
+per-config loop is modest — see sweep_bench for the grouped case.
 """
 from __future__ import annotations
 
@@ -10,25 +14,27 @@ import time
 
 from benchmarks.common import N_SAMPLES, emit, mnist_like_fixture
 from repro.configs.imac_mnist import TABLE_III_CONFIGS
-from repro.core.evaluate import test_imac
+from repro.explore import run_sweep
 
 
 def run():
     params, xte, yte, dig_acc = mnist_like_fixture()
     emit("table3/digital_reference", 0.0, f"acc={dig_acc:.4f}")
+    t0 = time.perf_counter()
+    results = run_sweep(
+        params, xte, yte, TABLE_III_CONFIGS, n_samples=N_SAMPLES, chunk=32
+    )
+    us_per_cfg = (time.perf_counter() - t0) / len(results) * 1e6
     rows = []
-    for name, cfg in TABLE_III_CONFIGS:
-        t0 = time.perf_counter()
-        res = test_imac(params, xte, yte, cfg, n_samples=N_SAMPLES, chunk=32)
-        dt = time.perf_counter() - t0
-        us = dt / res.n_samples * 1e6
+    for r in results:
+        res = r.result
         emit(
-            f"table3/{name}",
-            us,
+            f"table3/{r.name}",
+            us_per_cfg / res.n_samples,
             f"acc={res.accuracy:.4f};power_w={res.avg_power:.3f};"
             f"hp={list(res.hp)};vp={list(res.vp)};lat_ns={res.latency*1e9:.1f}",
         )
-        rows.append((name, res))
+        rows.append((r.name, res))
     # Trend assertions (soft — printed, not raised):
     by = {n: r for n, r in rows}
     trends = {

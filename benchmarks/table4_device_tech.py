@@ -1,29 +1,37 @@
 """Paper Table IV: memristive device technology sweep (MRAM/RRAM/CBRAM/
-PCM) at fixed H_P=[13,4,3], V_P=[4,3,1]."""
+PCM) at fixed H_P=[13,4,3], V_P=[4,3,1].
+
+All four technologies share one traced structure, so the exploration
+engine (repro.explore) evaluates the whole table as a single stacked
+circuit solve — one compilation instead of four.
+"""
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import N_SAMPLES, emit, mnist_like_fixture
 from repro.configs.imac_mnist import TABLE_IV_CONFIGS
-from repro.core.evaluate import test_imac
+from repro.explore import run_sweep
 
 
 def run():
-    params, xte, yte, dig_acc = mnist_like_fixture()
+    params, xte, yte, _ = mnist_like_fixture()
+    t0 = time.perf_counter()
+    results = run_sweep(
+        params, xte, yte, TABLE_IV_CONFIGS, n_samples=N_SAMPLES, chunk=32
+    )
+    us_per_cfg = (time.perf_counter() - t0) / len(results) * 1e6
     rows = []
-    for name, cfg in TABLE_IV_CONFIGS:
-        t0 = time.perf_counter()
-        res = test_imac(params, xte, yte, cfg, n_samples=N_SAMPLES, chunk=32)
-        dt = time.perf_counter() - t0
+    for r in results:
+        res = r.result
+        tech = r.config.resolved_tech()
         emit(
-            f"table4/{name}",
-            dt / res.n_samples * 1e6,
+            f"table4/{r.name}",
+            us_per_cfg / res.n_samples,
             f"acc={res.accuracy:.4f};power_w={res.avg_power:.3f};"
-            f"rlow={cfg.resolved_tech().r_low:.0f};"
-            f"rhigh={cfg.resolved_tech().r_high:.0f}",
+            f"rlow={tech.r_low:.0f};rhigh={tech.r_high:.0f}",
         )
-        rows.append((name, res))
+        rows.append((r.name, res))
     by = {n: r for n, r in rows}
     trends = {
         "pcm_least_power": by["PCM"].avg_power == min(r.avg_power for _, r in rows),

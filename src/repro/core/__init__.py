@@ -9,9 +9,9 @@ Public API:
   neurons.NeuronModel
   imac.IMACConfig / IMACNetwork / imac_linear (Modules 3-4)
   netlist.map_layer / map_imac          (SPICE netlist generation)
-  evaluate.test_imac / sweep            (Module 1: testIMAC)
+  evaluate.test_imac / evaluate_batch / sweep (Module 1: testIMAC)
 """
-from repro.core.devices import (  # noqa: F401
+from repro.core.devices import (
     CBRAM,
     MRAM,
     PCM,
@@ -21,17 +21,61 @@ from repro.core.devices import (  # noqa: F401
     custom_tech,
     get_tech,
 )
-from repro.core.evaluate import IMACResult, sweep, test_imac  # noqa: F401
-from repro.core.imac import IMACConfig, IMACNetwork, imac_linear  # noqa: F401
-from repro.core.interconnect import DEFAULT_INTERCONNECT, Interconnect  # noqa: F401
-from repro.core.mapping import MappedLayer, map_network, map_wb  # noqa: F401
-from repro.core.netlist import map_imac, map_layer, netlist_stats  # noqa: F401
-from repro.core.neurons import NeuronModel, get_neuron  # noqa: F401
-from repro.core.partition import PartitionPlan, auto_partition, plan_partition  # noqa: F401
-from repro.core.solver import (  # noqa: F401
+from repro.core.evaluate import (
+    IMACResult,
+    evaluate_batch,
+    structure_key,
+    sweep,
+    test_imac,
+)
+from repro.core.imac import IMACConfig, IMACNetwork, imac_linear, linear_forward
+from repro.core.interconnect import DEFAULT_INTERCONNECT, Interconnect
+from repro.core.mapping import MappedLayer, map_network, map_wb
+from repro.core.netlist import map_imac, map_layer, netlist_stats
+from repro.core.neurons import NeuronModel, get_neuron
+from repro.core.partition import PartitionPlan, auto_partition, plan_partition
+from repro.core.solver import (
     CircuitParams,
     crossbar_power,
     solve_crossbar,
     solve_dense_mna,
     solve_ideal,
 )
+
+__all__ = [
+    "CBRAM",
+    "CircuitParams",
+    "DEFAULT_INTERCONNECT",
+    "DeviceTech",
+    "IMACConfig",
+    "IMACNetwork",
+    "IMACResult",
+    "Interconnect",
+    "MRAM",
+    "MappedLayer",
+    "NeuronModel",
+    "PCM",
+    "PartitionPlan",
+    "RRAM",
+    "TECHNOLOGIES",
+    "auto_partition",
+    "crossbar_power",
+    "custom_tech",
+    "evaluate_batch",
+    "get_neuron",
+    "get_tech",
+    "imac_linear",
+    "linear_forward",
+    "map_imac",
+    "map_layer",
+    "map_network",
+    "map_wb",
+    "netlist_stats",
+    "plan_partition",
+    "solve_crossbar",
+    "solve_dense_mna",
+    "solve_ideal",
+    "structure_key",
+    "sweep",
+    "test_imac",
+]

@@ -5,18 +5,25 @@ The paper loops SPICE once per test sample (Algorithm 1 line 3); here the
 whole test set is one batched, jitted circuit solve — same semantics,
 TPU-native execution. Chunking keeps peak memory bounded for large
 N_S x tiles products.
+
+`evaluate_batch` is the functional core: it evaluates a *batch of
+structurally-compatible configurations* in a single vmapped circuit solve
+by stacking each configuration's conductance matrices and electrical
+scalars along a leading axis. The single-config path (`test_imac`) and the
+design-space engine (repro.explore) both go through it; the engine groups
+arbitrary configuration lists into compatible batches via `structure_key`.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.digital import Params, mlp_forward
-from repro.core.imac import IMACConfig, IMACNetwork
+from repro.core.imac import IMACConfig, build_plans, layer_latency, linear_forward
+from repro.core.mapping import map_network
+from repro.core.solver import CircuitParams, suggest_iters
 
 
 class IMACResult(NamedTuple):
@@ -30,6 +37,237 @@ class IMACResult(NamedTuple):
     n_samples: int
     hp: tuple
     vp: tuple
+
+
+def structure_key(topology: Sequence[int], cfg: IMACConfig) -> tuple:
+    """Hashable key of everything that shapes the traced computation.
+
+    Two configurations with equal keys differ only in *numeric leaves*
+    (device conductances, wire/periphery resistances, SOR factor, read
+    noise) and can therefore share one compiled, vmapped solve — the
+    leaves are stacked along a leading config axis. Everything that
+    changes array shapes (partition plans), loop bounds (`gs_iters`,
+    `gs_tol`) or traced-code structure (parasitics, neuron model) must
+    match.
+    """
+    plans = build_plans(topology, cfg)
+    iters = tuple(
+        cfg.gs_iters or suggest_iters(p.rows, p.cols) for p in plans
+    )
+    return (
+        tuple(topology),
+        tuple((p.hp, p.vp, p.rows, p.cols) for p in plans),
+        bool(cfg.parasitics),
+        iters,
+        float(cfg.gs_tol),
+        cfg.resolved_neuron(),
+        jnp.dtype(cfg.dtype).name,
+    )
+
+
+def evaluate_batch(
+    params: Params,
+    x: jax.Array,
+    y: jax.Array,
+    cfgs: "Sequence[IMACConfig]",
+    *,
+    n_samples: Optional[int] = None,
+    chunk: int = 256,
+    variation_key: Optional[jax.Array] = None,
+    noise_key: Optional[jax.Array] = None,
+    activation: str = "sigmoid",
+    mapped: Optional[list] = None,
+) -> "list[IMACResult]":
+    """Evaluate many structurally-compatible IMAC configurations at once.
+
+    All configurations must share a `structure_key` (same partition plans,
+    solver iteration counts, neuron model, parasitics flag, dtype); their
+    conductance matrices and electrical scalars are stacked along a
+    leading axis and the whole circuit simulation runs as one vmapped,
+    jitted solve per sample chunk — one XLA compilation for the entire
+    group instead of one per configuration.
+
+    Args:
+      params: trained digital weights/biases [(W, b), ...].
+      x: (N, fan_in) inputs in [0, 1] digital units.
+      y: (N,) integer labels.
+      cfgs: structurally-compatible configurations (see `structure_key`).
+      n_samples: N_S — number of test samples (default: all).
+      chunk: samples per jitted circuit solve.
+      variation_key: optional device-variation Monte-Carlo draw (the same
+        draw is applied to every configuration, as in a paired sweep).
+      noise_key: optional read-noise draw (shared across configurations).
+      activation: digital reference activation.
+      mapped: optional pre-computed mapWB output per configuration (one
+        map_network list per config); lets a sweep engine share mappings
+        between configurations that differ only in circuit parameters.
+
+    Returns:
+      One IMACResult per configuration, in input order.
+
+    Raises:
+      ValueError: if the configurations are not structurally compatible.
+        Use repro.explore.run_sweep to group arbitrary configuration
+        lists into compatible batches automatically.
+    """
+    cfgs = list(cfgs)
+    if not cfgs:
+        return []
+    topology = [params[0][0].shape[0]] + [w.shape[1] for w, _ in params]
+    key0 = structure_key(topology, cfgs[0])
+    for c in cfgs[1:]:
+        if structure_key(topology, c) != key0:
+            raise ValueError(
+                "evaluate_batch needs structurally-compatible configs "
+                "(equal structure_key); got a mismatch — group them with "
+                "repro.explore.run_sweep instead"
+            )
+
+    cfg0 = cfgs[0]
+    plans = build_plans(topology, cfg0)
+    neuron = cfg0.resolved_neuron()
+    dtype = cfg0.dtype
+    parasitics = cfg0.parasitics
+    tol = cfg0.gs_tol
+    v_unit = cfg0.vdd
+    iters = [cfg0.gs_iters or suggest_iters(p.rows, p.cols) for p in plans]
+    n_layers = len(plans)
+
+    n = n_samples or x.shape[0]
+    x, y = x[:n], y[:n]
+
+    # mapWB per configuration (outside the trace, identical to the
+    # single-config path), then stack: per layer (C, M, N) conductances
+    # and (C,) sense scales; electrical scalars as (C,) vectors.
+    mapped_all = mapped if mapped is not None else [
+        map_network(
+            params,
+            c.resolved_tech(),
+            v_unit=c.vdd,
+            quantize=c.quantize,
+            variation_key=variation_key,
+        )
+        for c in cfgs
+    ]
+    g_pos = tuple(
+        jnp.stack([m[layer].g_pos for m in mapped_all])
+        for layer in range(n_layers)
+    )
+    g_neg = tuple(
+        jnp.stack([m[layer].g_neg for m in mapped_all])
+        for layer in range(n_layers)
+    )
+    k = tuple(
+        jnp.asarray([m[layer].k for m in mapped_all], dtype)
+        for layer in range(n_layers)
+    )
+    scal = dict(
+        r_seg=jnp.asarray([c.interconnect.r_segment for c in cfgs], dtype),
+        r_source=jnp.asarray([c.r_source for c in cfgs], dtype),
+        r_tia=jnp.asarray([c.r_tia for c in cfgs], dtype),
+        omega=jnp.asarray([c.sor_omega for c in cfgs], dtype),
+        read_noise=jnp.asarray(
+            [c.resolved_tech().read_noise_rel for c in cfgs], dtype
+        ),
+    )
+
+    def forward_all(gp, gn, kk, sc, xb, nkey):
+        """Forward every stacked configuration over a chunk of samples.
+
+        The config axis is an ordinary leading batch axis: each layer is
+        ONE crossbar solve over (C, batch, tiles) with per-config
+        electrical scalars broadcast inside the solver — a single
+        while_loop, no per-lane masking.
+        """
+        a = xb  # (batch, F); becomes (C, batch, F) after the first layer.
+        keys = (
+            jax.random.split(nkey, n_layers)
+            if nkey is not None
+            else [None] * n_layers
+        )
+        powers, residuals = [], []
+        for layer, plan in enumerate(plans):
+            cp = CircuitParams(
+                r_row=sc["r_seg"],
+                r_col=sc["r_seg"],
+                r_source=sc["r_source"],
+                r_tia=sc["r_tia"],
+                gs_iters=iters[layer],
+                omega=sc["omega"],
+                tol=tol,
+            )
+            a, power, residual, _ = linear_forward(
+                gp[layer],
+                gn[layer],
+                kk[layer],
+                v_unit,
+                plan,
+                cp,
+                neuron,
+                a,
+                parasitics=parasitics,
+                is_output=(layer == n_layers - 1),
+                noise_key=keys[layer],
+                read_noise_rel=sc["read_noise"],
+                dtype=dtype,
+            )
+            powers.append(jnp.mean(power, axis=-1))   # (C,)
+            residuals.append(residual)                # (C,)
+        pred = jnp.argmax(a, axis=-1)                 # (C, batch)
+        return pred, jnp.stack(powers, axis=-1), jnp.stack(residuals, axis=-1)
+
+    run_chunk = jax.jit(forward_all)
+
+    n_chunks = (n + chunk - 1) // chunk
+    keys = (
+        jax.random.split(noise_key, n_chunks)
+        if noise_key is not None
+        else [None] * n_chunks
+    )
+    preds, powers, residuals = [], [], []
+    for ci in range(n_chunks):
+        xb = x[ci * chunk : (ci + 1) * chunk]
+        pred, pwr, res = run_chunk(g_pos, g_neg, k, scal, xb, keys[ci])
+        preds.append(pred)                 # (C, B)
+        powers.append(pwr * xb.shape[0])   # weight by chunk size
+        residuals.append(res)
+    pred = jnp.concatenate(preds, axis=1)                      # (C, n)
+    per_layer_power = jnp.sum(jnp.stack(powers), axis=0) / n   # (C, L)
+    worst_res = jnp.max(jnp.stack(residuals), axis=0)          # (C, L)
+
+    dig_pred = jnp.argmax(mlp_forward(params, x, activation), axis=-1)
+    dig_acc = float(jnp.mean((dig_pred == y).astype(jnp.float32)))
+
+    results = []
+    for i, cfg in enumerate(cfgs):
+        errors = int(jnp.sum((pred[i] != y).astype(jnp.int32)))
+        # Latency is input-independent (structural): derived analytically.
+        latency = float(
+            sum(
+                jnp.asarray(
+                    layer_latency(p, cfg.interconnect, cfg.resolved_neuron()),
+                    dtype,
+                )
+                for p in plans
+            )
+            + cfg.t_sampling
+        )
+        plp = per_layer_power[i]
+        results.append(
+            IMACResult(
+                accuracy=1.0 - errors / n,
+                error_rate=errors / n,
+                avg_power=float(jnp.sum(plp)),
+                latency=latency,
+                digital_accuracy=dig_acc,
+                per_layer_power=tuple(float(p) for p in plp),
+                worst_residual=float(jnp.max(worst_res[i])),
+                n_samples=n,
+                hp=tuple(p.hp for p in plans),
+                vp=tuple(p.vp for p in plans),
+            )
+        )
+    return results
 
 
 def test_imac(
@@ -46,6 +284,8 @@ def test_imac(
 ) -> IMACResult:
     """Evaluate the IMAC deployment of `params` on (x, y).
 
+    Thin wrapper over `evaluate_batch` with a single-configuration batch.
+
     Args:
       params: trained digital weights/biases [(W, b), ...].
       x: (N, fan_in) inputs in [0, 1] digital units.
@@ -59,58 +299,17 @@ def test_imac(
     Returns:
       IMACResult with accuracy/power/latency (Algorithm 1 lines 21-22).
     """
-    n = n_samples or x.shape[0]
-    x, y = x[:n], y[:n]
-    net = IMACNetwork(params, cfg, variation_key=variation_key)
-
-    @jax.jit
-    def run_chunk(xb, key):
-        out, stats = net(xb, noise_key=key)
-        pred = jnp.argmax(out, axis=-1)
-        return (
-            pred,
-            jnp.stack([jnp.mean(s.power) for s in stats]),
-            jnp.stack([s.residual for s in stats]),
-        )
-
-    preds, powers, residuals = [], [], []
-    n_chunks = (n + chunk - 1) // chunk
-    keys = (
-        jax.random.split(noise_key, n_chunks)
-        if noise_key is not None
-        else [None] * n_chunks
-    )
-    for ci in range(n_chunks):
-        xb = x[ci * chunk : (ci + 1) * chunk]
-        pred, pwr, res = run_chunk(xb, keys[ci])
-        preds.append(pred)
-        powers.append(pwr * xb.shape[0])  # weight by chunk size
-        residuals.append(res)
-    pred = jnp.concatenate(preds)
-    per_layer_power = jnp.sum(jnp.stack(powers), axis=0) / n
-    worst_res = float(jnp.max(jnp.stack(residuals)))
-
-    errors = int(jnp.sum((pred != y).astype(jnp.int32)))
-    acc = 1.0 - errors / n
-    # Latency is input-independent (structural): take from one forward.
-    _, stats = net(x[:1])
-    latency = float(net.total_latency(stats))
-
-    dig_pred = jnp.argmax(mlp_forward(params, x, activation), axis=-1)
-    dig_acc = float(jnp.mean((dig_pred == y).astype(jnp.float32)))
-
-    return IMACResult(
-        accuracy=acc,
-        error_rate=errors / n,
-        avg_power=float(jnp.sum(per_layer_power)),
-        latency=latency,
-        digital_accuracy=dig_acc,
-        per_layer_power=tuple(float(p) for p in per_layer_power),
-        worst_residual=worst_res,
-        n_samples=n,
-        hp=tuple(net.hp),
-        vp=tuple(net.vp),
-    )
+    return evaluate_batch(
+        params,
+        x,
+        y,
+        [cfg],
+        n_samples=n_samples,
+        chunk=chunk,
+        variation_key=variation_key,
+        noise_key=noise_key,
+        activation=activation,
+    )[0]
 
 
 def sweep(
@@ -120,6 +319,12 @@ def sweep(
     cfgs: "Sequence[tuple[str, IMACConfig]]",
     **kw,
 ) -> "list[tuple[str, IMACResult]]":
-    """Design-space sweep: evaluate many IMAC configurations (the paper's
-    Tables III/IV are sweeps over partitioning / device technology)."""
+    """Design-space sweep, one configuration at a time (the paper's
+    Tables III/IV are sweeps over partitioning / device technology).
+
+    This is the reference per-config loop: every configuration re-traces
+    and re-compiles its own solve. Prefer repro.explore.run_sweep, which
+    groups structurally-compatible configurations into single vmapped
+    solves and memoizes results on disk.
+    """
     return [(name, test_imac(params, x, y, cfg, **kw)) for name, cfg in cfgs]

@@ -14,7 +14,7 @@ Fast paths:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,11 +33,10 @@ from repro.core.partition import (
 )
 from repro.core.solver import (
     CircuitParams,
-    CrossbarSolution,
     TridiagFn,
+    _align as _align_leading,
     crossbar_power,
     solve_crossbar,
-    solve_ideal,
     suggest_iters,
     tridiag_scan,
 )
@@ -118,6 +117,96 @@ def build_plans(
     ]
 
 
+def linear_forward(
+    g_pos: jax.Array,
+    g_neg: jax.Array,
+    k: "jax.Array | float",
+    v_unit: "jax.Array | float",
+    plan: PartitionPlan,
+    cp: CircuitParams,
+    neuron,
+    a: jax.Array,
+    *,
+    parasitics: bool = True,
+    is_output: bool = False,
+    tridiag: TridiagFn = tridiag_scan,
+    noise_key: Optional[jax.Array] = None,
+    read_noise_rel: "jax.Array | float" = 0.0,
+    dtype: jnp.dtype = jnp.float32,
+) -> "tuple[jax.Array, jax.Array, jax.Array, jax.Array]":
+    """Functional core of one analog layer: crossbar solve + diff amp + neuron.
+
+    Supports stacked-configuration batches: the conductance matrices may
+    carry leading config axes — g_pos/g_neg (C, fan_in+1, fan_out) with
+    `k`, the electrical fields of `cp` (not `gs_iters`/`tol`) and
+    `read_noise_rel` as (C,) arrays — and the whole configuration batch
+    then shares ONE circuit solve / ONE compilation
+    (see core/evaluate.evaluate_batch). With 2-D conductances and float
+    scalars this is exactly the single-configuration layer.
+
+    Returns:
+      (activations, power, residual, z) — power is (..., batch), residual
+      (...,), z the recovered pre-activations.
+    """
+    # Bias input: driven at v_unit (logical activation 1).
+    ones = jnp.ones(a.shape[:-1] + (1,), dtype)
+    v = jnp.concatenate([a.astype(dtype), ones], axis=-1) * v_unit
+
+    if not parasitics:
+        g_diff = (g_pos - g_neg).astype(dtype)
+        i_diff = jnp.einsum("...mn,...bm->...bn", g_diff, v)
+        p_dev = jnp.einsum("...mn,...bm->...b", g_pos + g_neg, v**2)
+        residual = jnp.zeros(g_pos.shape[:-2], dtype)
+    else:
+        tiles_p = tile_matrix(g_pos.astype(dtype), plan)
+        tiles_n = tile_matrix(g_neg.astype(dtype), plan)
+        g_all = jnp.concatenate([tiles_p, tiles_n], axis=-3)  # (..., 2T, M, N)
+        v_tiles = tile_inputs(v, plan)                        # (..., batch, hp, M)
+        # tile t = h*vp + vcol shares the h-th input slice.
+        v_per_tile = jnp.repeat(v_tiles, plan.vp, axis=-2)    # (..., batch, T, M)
+        v_all = jnp.concatenate([v_per_tile, v_per_tile], axis=-2)  # (..., b, 2T, M)
+        # Insert the sample axis into g: (..., 1, 2T, M, N) vs (..., b, 2T, M).
+        g_b = g_all[..., None, :, :, :]
+        sol = solve_crossbar(g_b, v_all, cp, tridiag=tridiag)
+        t = plan.n_tiles
+        i_pos = combine_outputs(sol.i_out[..., :t, :], plan)
+        i_neg = combine_outputs(sol.i_out[..., t:, :], plan)
+        i_diff = i_pos - i_neg
+        p_dev = crossbar_power(g_b, v_all, sol, cp).sum(axis=-1)
+        residual = jnp.max(sol.residual, axis=(-1, -2))
+
+    if noise_key is not None:
+        # One draw shared by every stacked configuration — identical to
+        # evaluating each configuration separately with the same key.
+        noise = jax.random.normal(noise_key, i_diff.shape[-2:], dtype)
+        rel = _align_leading(read_noise_rel, i_diff.ndim, dtype)
+        scale = rel * jnp.maximum(jnp.abs(i_diff), 1e-12)
+        i_diff = i_diff + scale * noise
+
+    # Differential sense: recover digital pre-activation.
+    z = i_diff / (_align_leading(k, i_diff.ndim, dtype) * v_unit)
+    z = neuron.clip_preactivation(z)
+    act = z if is_output else neuron.activation(z)
+
+    # Interface power: one TIA+amp per tile column, one neuron per output.
+    n_amps = plan.hp * plan.vp * plan.cols * 2  # differential pair sensing
+    n_neurons = plan.total_cols
+    p_iface = n_amps * neuron.p_amp + n_neurons * neuron.p_neuron
+    power = p_dev + p_iface
+    return act, power, residual, z
+
+
+def layer_latency(plan: PartitionPlan, interconnect: Interconnect, neuron) -> float:
+    """Structural settling latency of one layer (input-independent).
+
+    Elmore delay of the row+column lines (1% settling ~ 4.6 tau) + neuron.
+    """
+    t_line = 4.6 * (
+        interconnect.elmore_delay(plan.cols) + interconnect.elmore_delay(plan.rows)
+    )
+    return t_line + neuron.t_settle
+
+
 def imac_linear(
     mapped: MappedLayer,
     plan: PartitionPlan,
@@ -145,59 +234,25 @@ def imac_linear(
     tech = cfg.resolved_tech()
     neuron = cfg.resolved_neuron()
     dtype = cfg.dtype
-    v_unit = mapped.v_unit
-    batch = a.shape[0]
-
-    # Bias input: driven at v_unit (logical activation 1).
-    ones = jnp.ones((batch, 1), dtype)
-    v = jnp.concatenate([a.astype(dtype), ones], axis=-1) * v_unit
-
-    if not cfg.parasitics:
-        g_diff = mapped.g_diff.astype(dtype)
-        i_diff = jnp.einsum("mn,bm->bn", g_diff, v)
-        p_dev = jnp.einsum("mn,bm->b", mapped.g_pos + mapped.g_neg, v**2)
-        residual = jnp.zeros((), dtype)
-        row_segs, col_segs = plan.cols, plan.rows
-    else:
-        tiles_p = tile_matrix(mapped.g_pos.astype(dtype), plan)
-        tiles_n = tile_matrix(mapped.g_neg.astype(dtype), plan)
-        g_all = jnp.concatenate([tiles_p, tiles_n], axis=0)  # (2T, M, N)
-        v_tiles = tile_inputs(v, plan)                        # (batch, hp, M)
-        # tile t = h*vp + vcol shares the h-th input slice.
-        v_per_tile = jnp.repeat(v_tiles, plan.vp, axis=1)     # (batch, T, M)
-        v_all = jnp.concatenate([v_per_tile, v_per_tile], axis=1)  # (batch, 2T, M)
-        cp = cfg.circuit_params(plan.rows, plan.cols)
-        sol = solve_crossbar(g_all[None], v_all, cp, tridiag=tridiag)
-        t = plan.n_tiles
-        i_pos = combine_outputs(sol.i_out[:, :t, :], plan)
-        i_neg = combine_outputs(sol.i_out[:, t:, :], plan)
-        i_diff = i_pos - i_neg
-        p_dev = crossbar_power(g_all[None], v_all, sol, cp).sum(axis=-1)
-        residual = jnp.max(sol.residual)
-        row_segs, col_segs = plan.cols, plan.rows
-
-    if noise_key is not None and tech.read_noise_rel > 0.0:
-        scale = tech.read_noise_rel * jnp.maximum(jnp.abs(i_diff), 1e-12)
-        i_diff = i_diff + scale * jax.random.normal(
-            noise_key, i_diff.shape, dtype
-        )
-
-    # Differential sense: recover digital pre-activation.
-    z = i_diff / (mapped.k * v_unit)
-    z = neuron.clip_preactivation(z)
-    act = z if is_output else neuron.activation(z)
-
-    # Interface power: one TIA+amp per tile column, one neuron per output.
-    n_amps = plan.hp * plan.vp * plan.cols * 2  # differential pair sensing
-    n_neurons = plan.total_cols
-    p_iface = n_amps * neuron.p_amp + n_neurons * neuron.p_neuron
-    power = p_dev + p_iface
-
-    # Latency: Elmore of row+column lines (1% settling ~ 4.6 tau) + neuron.
-    ic = cfg.interconnect
-    t_line = 4.6 * (ic.elmore_delay(row_segs) + ic.elmore_delay(col_segs))
-    latency = jnp.asarray(t_line + neuron.t_settle, dtype)
-
+    if not (noise_key is not None and tech.read_noise_rel > 0.0):
+        noise_key = None
+    act, power, residual, z = linear_forward(
+        mapped.g_pos,
+        mapped.g_neg,
+        mapped.k,
+        mapped.v_unit,
+        plan,
+        cfg.circuit_params(plan.rows, plan.cols),
+        neuron,
+        a,
+        parasitics=cfg.parasitics,
+        is_output=is_output,
+        tridiag=tridiag,
+        noise_key=noise_key,
+        read_noise_rel=tech.read_noise_rel,
+        dtype=dtype,
+    )
+    latency = jnp.asarray(layer_latency(plan, cfg.interconnect, neuron), dtype)
     return IMACLayerOutput(
         activations=act,
         stats=LayerStats(power=power, latency=latency, residual=residual, z=z),

@@ -18,7 +18,6 @@ import math
 from typing import Sequence
 
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,19 +84,23 @@ def plan_partition(
 
 
 def tile_matrix(g: jnp.ndarray, plan: PartitionPlan, fill: float = 0.0) -> jnp.ndarray:
-    """Split (total_rows, total_cols) into (hp*vp, rows, cols) padded tiles.
+    """Split (..., total_rows, total_cols) into (..., hp*vp, rows, cols)
+    padded tiles; leading axes (e.g. a stacked-config axis) pass through.
 
     Padding cells get conductance `fill` (an absent/unprogrammed device;
     0 S = no device bridging the wires, the wire grid itself remains).
     """
-    if g.shape != (plan.total_rows, plan.total_cols):
+    if g.shape[-2:] != (plan.total_rows, plan.total_cols):
         raise ValueError(f"matrix {g.shape} != plan {(plan.total_rows, plan.total_cols)}")
-    padded = jnp.full(
-        (plan.hp * plan.rows, plan.vp * plan.cols), fill, dtype=g.dtype
+    lead = g.shape[:-2]
+    pad = [(0, 0)] * len(lead) + [(0, plan.row_pad), (0, plan.col_pad)]
+    padded = jnp.pad(g, pad, constant_values=fill)
+    tiles = padded.reshape(*lead, plan.hp, plan.rows, plan.vp, plan.cols)
+    order = tuple(range(len(lead)))
+    tiles = tiles.transpose(
+        *order, len(lead), len(lead) + 2, len(lead) + 1, len(lead) + 3
     )
-    padded = padded.at[: plan.total_rows, : plan.total_cols].set(g)
-    tiles = padded.reshape(plan.hp, plan.rows, plan.vp, plan.cols)
-    return tiles.transpose(0, 2, 1, 3).reshape(plan.n_tiles, plan.rows, plan.cols)
+    return tiles.reshape(*lead, plan.n_tiles, plan.rows, plan.cols)
 
 
 def untile_matrix(tiles: jnp.ndarray, plan: PartitionPlan) -> jnp.ndarray:

@@ -15,12 +15,10 @@ static-conductance assumption; DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List
 
 from repro.configs.base import ModelConfig
 from repro.core.devices import DeviceTech, get_tech
-from repro.core.imac import IMACConfig
 from repro.core.interconnect import DEFAULT_INTERCONNECT
 from repro.core.neurons import get_neuron
 from repro.core.partition import auto_partition

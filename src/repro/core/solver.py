@@ -24,8 +24,7 @@ reference) or the Pallas kernel in repro.kernels.tridiag.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -125,6 +124,21 @@ def tridiag_scan(dl: jax.Array, d: jax.Array, du: jax.Array, b: jax.Array) -> ja
     return jnp.moveaxis(x_rev, 0, -1)
 
 
+def _align(value, ndim: int, dtype=None) -> jax.Array:
+    """Align a circuit scalar against an array of rank `ndim`.
+
+    Electrical parameters may be python floats (one tile family) or
+    arrays with leading batch axes — e.g. a (C,) vector of per-config
+    resistances in a batched design-space sweep. Leading-axis arrays are
+    reshaped so their axes line up with the target's *leading* axes and
+    broadcast over the rest.
+    """
+    v = jnp.asarray(value, dtype)
+    if v.ndim == 0 or v.ndim == ndim:
+        return v
+    return v.reshape(v.shape + (1,) * (ndim - v.ndim))
+
+
 def _row_system(
     g: jax.Array, vc: jax.Array, v_in: jax.Array, cp: CircuitParams
 ):
@@ -134,18 +148,23 @@ def _row_system(
     """
     n = g.shape[-1]
     dtype = g.dtype
-    chain = jnp.full((n,), 2.0 * cp.g_row, dtype)
-    chain = chain.at[0].set(cp.g_row + cp.g_source)
-    if n > 1:
-        chain = chain.at[n - 1].set(cp.g_row)
+    g_row = _align(cp.g_row, g.ndim, dtype)
+    g_source = _align(cp.g_source, g.ndim, dtype)
+    if n == 1:
+        chain = g_source
     else:
-        chain = chain.at[0].set(cp.g_source)
+        idx = jnp.arange(n)
+        chain = jnp.where(
+            idx == 0,
+            g_row + g_source,
+            jnp.where(idx == n - 1, g_row, 2.0 * g_row),
+        )
     d = chain + g
-    off = jnp.full((n,), -cp.g_row, dtype)
-    dl = jnp.broadcast_to(off, g.shape)
-    du = jnp.broadcast_to(off, g.shape)
+    off = jnp.broadcast_to(-g_row, g.shape)
+    dl = off
+    du = off
     b = g * vc
-    b = b.at[..., 0].add(cp.g_source * v_in)
+    b = b.at[..., 0].add(_align(cp.g_source, g.ndim - 1, dtype) * v_in)
     return dl, d, du, b
 
 
@@ -159,16 +178,21 @@ def _col_system(g: jax.Array, vr: jax.Array, cp: CircuitParams):
     dtype = g.dtype
     gt = jnp.swapaxes(g, -1, -2)     # (..., N, M)
     vrt = jnp.swapaxes(vr, -1, -2)
-    chain = jnp.full((m,), 2.0 * cp.g_col, dtype)
-    chain = chain.at[0].set(cp.g_col)
-    if m > 1:
-        chain = chain.at[m - 1].set(cp.g_col + cp.g_tia)
+    g_col = _align(cp.g_col, gt.ndim, dtype)
+    g_tia = _align(cp.g_tia, gt.ndim, dtype)
+    if m == 1:
+        chain = g_tia
     else:
-        chain = chain.at[0].set(cp.g_tia)
+        idx = jnp.arange(m)
+        chain = jnp.where(
+            idx == 0,
+            g_col,
+            jnp.where(idx == m - 1, g_col + g_tia, 2.0 * g_col),
+        )
     d = chain + gt
-    off = jnp.full((m,), -cp.g_col, dtype)
-    dl = jnp.broadcast_to(off, gt.shape)
-    du = jnp.broadcast_to(off, gt.shape)
+    off = jnp.broadcast_to(-g_col, gt.shape)
+    dl = off
+    du = off
     b = gt * vrt  # TIA node is grounded: no extra rhs term.
     return dl, d, du, b
 
@@ -180,6 +204,12 @@ def solve_crossbar(
     tridiag: TridiagFn = tridiag_scan,
 ) -> CrossbarSolution:
     """DC-solve crossbar tiles.
+
+    The electrical fields of `cp` may be python floats or arrays with
+    leading batch axes aligned to g's leading axes — a design-space sweep
+    passes (C,) per-config resistances so C configurations share one
+    solve (and one compilation) with a single while_loop; `gs_iters` and
+    `tol` stay static.
 
     Args:
       g: (..., M, N) memristor conductances (S). 0 = absent device.
@@ -199,6 +229,7 @@ def solve_crossbar(
     g = jnp.broadcast_to(g, batch + (m, n))
     v_in = jnp.broadcast_to(v_in, batch + (m,))
     vc0 = jnp.zeros_like(g)
+    omega = _align(cp.omega, g.ndim, g.dtype)
 
     def sweep(vc):
         dl, d, du, b = _row_system(g, vc, v_in, cp)
@@ -220,7 +251,7 @@ def solve_crossbar(
         def w_body(carry):
             vc, _, i = carry
             vr, vc_gs = sweep(vc)
-            vc_new = vc + cp.omega * (vc_gs - vc)
+            vc_new = vc + omega * (vc_gs - vc)
             res = jnp.max(jnp.abs(vc_new - vc), axis=(-1, -2))
             return vc_new, res, i + 1
 
@@ -231,13 +262,13 @@ def solve_crossbar(
         def body(_, carry):
             vc, _ = carry
             vr, vc_gs = sweep(vc)
-            vc_new = vc + cp.omega * (vc_gs - vc)
+            vc_new = vc + omega * (vc_gs - vc)
             res = jnp.max(jnp.abs(vc_new - vc), axis=(-1, -2))
             return vc_new, res
 
         vc, residual = jax.lax.fori_loop(0, cp.gs_iters, body, (vc0, res0))
     vr, vc = sweep(vc)  # final row solve consistent with converged vc
-    i_out = cp.g_tia * vc[..., m - 1, :]
+    i_out = _align(cp.g_tia, vc.ndim - 1, g.dtype) * vc[..., m - 1, :]
     return CrossbarSolution(i_out=i_out, vr=vr, vc=vc, residual=residual)
 
 
@@ -336,12 +367,17 @@ def crossbar_power(
     """Total dissipated power (W) of solved tiles; reduces last two dims."""
     vr, vc = sol.vr, sol.vc
     p_dev = jnp.sum(g * (vr - vc) ** 2, axis=(-1, -2))
+    ndim = p_dev.ndim
     dr = jnp.diff(vr, axis=-1)
-    p_row = cp.g_row * jnp.sum(dr**2, axis=(-1, -2))
+    p_row = _align(cp.g_row, ndim, dr.dtype) * jnp.sum(dr**2, axis=(-1, -2))
     dc = jnp.diff(vc, axis=-2)
-    p_col = cp.g_col * jnp.sum(dc**2, axis=(-1, -2))
-    p_src = cp.g_source * jnp.sum((v_in - vr[..., :, 0]) ** 2, axis=-1)
-    p_tia = cp.g_tia * jnp.sum(vc[..., -1, :] ** 2, axis=-1)
+    p_col = _align(cp.g_col, ndim, dc.dtype) * jnp.sum(dc**2, axis=(-1, -2))
+    p_src = _align(cp.g_source, ndim, vr.dtype) * jnp.sum(
+        (v_in - vr[..., :, 0]) ** 2, axis=-1
+    )
+    p_tia = _align(cp.g_tia, ndim, vc.dtype) * jnp.sum(
+        vc[..., -1, :] ** 2, axis=-1
+    )
     return p_dev + p_row + p_col + p_src + p_tia
 
 

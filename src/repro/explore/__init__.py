@@ -1,0 +1,38 @@
+"""Design-space exploration for IMAC architectures.
+
+The paper's headline capability — multi-objective design-space
+exploration — as a first-class engine:
+
+  spec.SweepSpec        declarative grid/random sweeps over the config space
+  engine.run_sweep      batched, memoized evaluation (vmapped group solves)
+  engine.explore        run_sweep + Pareto-front extraction
+  pareto.pareto_front   non-dominated (accuracy, power, latency) points
+  cache.ResultCache     on-disk result memoization
+
+Example::
+
+    from repro.explore import SweepSpec, explore
+
+    spec = SweepSpec.grid(
+        tech=["MRAM", "RRAM", "CBRAM", "PCM"], array_size=[32, 64]
+    )
+    results, front = explore(params, x, y, spec, n_samples=64,
+                             cache="artifacts/sweep_cache")
+    for p in front:
+        print(p.name, p.accuracy, p.avg_power, p.latency)
+"""
+from repro.explore.cache import ResultCache
+from repro.explore.engine import SweepResult, explore, run_sweep
+from repro.explore.pareto import DEFAULT_OBJECTIVES, pareto_front, pareto_mask
+from repro.explore.spec import SweepSpec
+
+__all__ = [
+    "DEFAULT_OBJECTIVES",
+    "ResultCache",
+    "SweepResult",
+    "SweepSpec",
+    "explore",
+    "pareto_front",
+    "pareto_mask",
+    "run_sweep",
+]

@@ -1,0 +1,150 @@
+"""On-disk memoization of IMAC evaluation results.
+
+Results are tiny (a dozen scalars) while producing them means a full
+circuit simulation, so the cache is a directory of JSON files keyed by a
+SHA-256 over everything that determines the numbers: the configuration's
+canonical fingerprint, the trained parameters, the evaluation data and
+the evaluation arguments (sample count, chunking, Monte-Carlo keys).
+A warm sweep re-run — or a sweep that shares points with an earlier one —
+returns identical results without touching the solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.evaluate import IMACResult
+from repro.core.imac import IMACConfig
+
+
+def _canonical(obj):
+    """JSON-stable canonical form of config values (nested dataclasses,
+    dtypes, arrays) for fingerprinting."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        d = {
+            f.name: _canonical(getattr(obj, f.name))
+            for f in dataclasses.fields(obj)
+        }
+        d["__class__"] = type(obj).__name__
+        return d
+    if isinstance(obj, (list, tuple)):
+        return [_canonical(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        return {
+            "__array__": hashlib.sha256(
+                np.ascontiguousarray(obj).tobytes()
+            ).hexdigest(),
+            "shape": list(np.shape(obj)),
+        }
+    # dtypes and anything else with a stable name/str.
+    return str(obj)
+
+
+def config_fingerprint(cfg: IMACConfig) -> str:
+    return hashlib.sha256(
+        json.dumps(_canonical(cfg), sort_keys=True).encode()
+    ).hexdigest()
+
+
+def params_fingerprint(params: "Sequence[tuple]") -> str:
+    h = hashlib.sha256()
+    for w, b in params:
+        h.update(np.asarray(w).tobytes())
+        h.update(np.asarray(b).tobytes())
+    return h.hexdigest()
+
+
+def data_fingerprint(x, y) -> str:
+    h = hashlib.sha256()
+    h.update(np.asarray(x).tobytes())
+    h.update(np.asarray(y).tobytes())
+    return h.hexdigest()
+
+
+def _key_fingerprint(key: Optional[jax.Array]) -> str:
+    if key is None:
+        return "none"
+    return hashlib.sha256(np.asarray(key).tobytes()).hexdigest()
+
+
+def result_key(
+    cfg: IMACConfig,
+    params_fp: str,
+    data_fp: str,
+    *,
+    n_samples: Optional[int],
+    chunk: int,
+    variation_key=None,
+    noise_key=None,
+    activation: str = "sigmoid",
+) -> str:
+    """Cache key for one (config, params, data, eval-args) evaluation."""
+    payload = json.dumps(
+        {
+            "config": _canonical(cfg),
+            "params": params_fp,
+            "data": data_fp,
+            "n_samples": n_samples,
+            "chunk": chunk,
+            "variation_key": _key_fingerprint(variation_key),
+            "noise_key": _key_fingerprint(noise_key),
+            "activation": activation,
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+class ResultCache:
+    """Directory-backed result store: one JSON file per evaluation."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.json")
+
+    def get(self, key: str) -> Optional[IMACResult]:
+        f = self._file(key)
+        if not os.path.exists(f):
+            self.misses += 1
+            return None
+        with open(f) as fh:
+            payload = json.load(fh)
+        r = payload["result"]
+        self.hits += 1
+        return IMACResult(
+            accuracy=r["accuracy"],
+            error_rate=r["error_rate"],
+            avg_power=r["avg_power"],
+            latency=r["latency"],
+            digital_accuracy=r["digital_accuracy"],
+            per_layer_power=tuple(r["per_layer_power"]),
+            worst_residual=r["worst_residual"],
+            n_samples=r["n_samples"],
+            hp=tuple(r["hp"]),
+            vp=tuple(r["vp"]),
+        )
+
+    def put(self, key: str, result: IMACResult, name: str = "") -> None:
+        payload = {"name": name, "result": result._asdict()}
+        tmp = self._file(key) + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(payload, fh)
+        os.replace(tmp, self._file(key))
+
+    def __len__(self) -> int:
+        return sum(
+            1 for f in os.listdir(self.path) if f.endswith(".json")
+        )

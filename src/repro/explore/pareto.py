@@ -1,0 +1,80 @@
+"""Multi-objective Pareto-front extraction over sweep results.
+
+The paper's design-space story is a trade-off surface — accuracy against
+power against latency. `pareto_front` returns the indices of the
+non-dominated points: no other point is at least as good on every
+objective and strictly better on one.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+# (IMACResult attribute, direction) — the paper's three objectives.
+DEFAULT_OBJECTIVES = (
+    ("accuracy", "max"),
+    ("avg_power", "min"),
+    ("latency", "min"),
+)
+
+
+def pareto_mask(points: np.ndarray, maximize: "Sequence[bool]") -> np.ndarray:
+    """Boolean mask of non-dominated rows.
+
+    Args:
+      points: (n, d) objective values.
+      maximize: per-column direction; False = minimize.
+
+    Returns:
+      (n,) bool mask; True = on the Pareto front. Duplicate points are
+      all kept (they don't strictly dominate each other).
+    """
+    pts = np.asarray(points, dtype=float)
+    if pts.ndim != 2:
+        raise ValueError(f"points must be (n, d), got {pts.shape}")
+    if pts.shape[1] != len(maximize):
+        raise ValueError(
+            f"{pts.shape[1]} objectives vs {len(maximize)} directions"
+        )
+    # Orient so larger is always better.
+    sign = np.where(np.asarray(maximize, dtype=bool), 1.0, -1.0)
+    v = pts * sign
+    n = v.shape[0]
+    mask = np.ones(n, dtype=bool)
+    for i in range(n):
+        at_least_as_good = (v >= v[i]).all(axis=1)
+        strictly_better = (v > v[i]).any(axis=1)
+        mask[i] = not np.any(at_least_as_good & strictly_better)
+    return mask
+
+
+def pareto_front(
+    results,
+    objectives: "Sequence[tuple[str, str]]" = DEFAULT_OBJECTIVES,
+) -> "list[int]":
+    """Indices of Pareto-optimal results, sorted by the first objective.
+
+    Args:
+      results: sequence of objects exposing the objective attributes —
+        IMACResult or repro.explore.engine.SweepResult (which proxies its
+        IMACResult fields).
+      objectives: (attribute, 'max'|'min') pairs.
+
+    Returns:
+      Indices into `results` of the non-dominated points.
+    """
+    for _, direction in objectives:
+        if direction not in ("max", "min"):
+            raise ValueError(f"direction must be 'max'|'min', got {direction!r}")
+    if not len(results):
+        return []
+    points = np.array(
+        [[getattr(r, attr) for attr, _ in objectives] for r in results]
+    )
+    maximize = [direction == "max" for _, direction in objectives]
+    mask = pareto_mask(points, maximize)
+    idx = [i for i in range(len(results)) if mask[i]]
+    first = points[:, 0] * (1.0 if maximize[0] else -1.0)
+    idx.sort(key=lambda i: -first[i])
+    return idx

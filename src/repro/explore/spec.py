@@ -1,0 +1,144 @@
+"""Declarative sweep specifications over the IMAC design space.
+
+A `SweepSpec` names a base `IMACConfig` and a set of axes; materializing
+it yields `(name, IMACConfig)` points — the full cross product for grid
+mode, or `samples` independent draws for random mode. Axes address
+`IMACConfig` fields directly (`tech`, `array_rows`, `r_source`, ...) plus
+two compound conveniences:
+
+  * ``array_size=n``       -> ``array_rows=n, array_cols=n``
+  * ``partition=(hp, vp)`` -> ``hp=hp, vp=vp`` (per-layer lists)
+
+Example::
+
+    spec = SweepSpec.grid(
+        IMACConfig(),
+        tech=["MRAM", "RRAM", "CBRAM", "PCM"],
+        array_size=[32, 64, 128],
+    )
+    points = spec.materialize()   # 12 named IMACConfigs
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.imac import IMACConfig
+
+
+def _apply_axis(cfg: IMACConfig, field: str, value) -> IMACConfig:
+    """Set one axis value on a config, expanding compound fields."""
+    if field == "array_size":
+        return dataclasses.replace(
+            cfg, array_rows=int(value), array_cols=int(value)
+        )
+    if field == "partition":
+        hp, vp = value
+        return dataclasses.replace(cfg, hp=list(hp), vp=list(vp))
+    if not hasattr(cfg, field):
+        raise ValueError(
+            f"unknown sweep axis {field!r}: not an IMACConfig field "
+            f"(compound axes: 'array_size', 'partition')"
+        )
+    return dataclasses.replace(cfg, **{field: value})
+
+
+def _fmt(value) -> str:
+    """Compact value rendering for point names."""
+    if isinstance(value, (list, tuple)):
+        return "x".join(_fmt(v) for v in value)
+    if isinstance(value, float):
+        return f"{value:g}"
+    return str(value)
+
+
+def point_name(assignment: "Sequence[tuple[str, object]]") -> str:
+    return ",".join(f"{field}={_fmt(value)}" for field, value in assignment)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A declarative design-space sweep.
+
+    Attributes:
+      base: configuration every point starts from.
+      axes: ordered (field, values) axes.
+      mode: 'grid' (cross product) or 'random' (independent draws).
+      samples: number of draws for random mode.
+      seed: RNG seed for random mode.
+    """
+
+    base: IMACConfig
+    axes: "tuple[tuple[str, tuple], ...]"
+    mode: str = "grid"
+    samples: int = 0
+    seed: int = 0
+
+    @classmethod
+    def grid(cls, base: IMACConfig = IMACConfig(), **axes) -> "SweepSpec":
+        """Full cross product of the given axes."""
+        return cls(base=base, axes=_freeze_axes(axes), mode="grid")
+
+    @classmethod
+    def random(
+        cls,
+        base: IMACConfig = IMACConfig(),
+        samples: int = 16,
+        seed: int = 0,
+        **axes,
+    ) -> "SweepSpec":
+        """`samples` points drawn uniformly per axis (with replacement)."""
+        return cls(
+            base=base,
+            axes=_freeze_axes(axes),
+            mode="random",
+            samples=samples,
+            seed=seed,
+        )
+
+    @property
+    def n_points(self) -> int:
+        if self.mode == "random":
+            return self.samples
+        n = 1
+        for _, values in self.axes:
+            n *= len(values)
+        return n
+
+    def materialize(self) -> "list[tuple[str, IMACConfig]]":
+        """Expand to concrete (name, config) points."""
+        if self.mode == "grid":
+            assignments = [
+                list(zip([f for f, _ in self.axes], combo))
+                for combo in itertools.product(*(v for _, v in self.axes))
+            ]
+        elif self.mode == "random":
+            rng = np.random.default_rng(self.seed)
+            assignments = []
+            for _ in range(self.samples):
+                assignments.append(
+                    [(f, v[int(rng.integers(len(v)))]) for f, v in self.axes]
+                )
+        else:
+            raise ValueError(f"unknown sweep mode {self.mode!r}")
+
+        points = []
+        for assignment in assignments:
+            cfg = self.base
+            for field, value in assignment:
+                cfg = _apply_axis(cfg, field, value)
+            points.append((point_name(assignment), cfg))
+        return points
+
+
+def _freeze_axes(axes: dict) -> "tuple[tuple[str, tuple], ...]":
+    frozen = []
+    for field, values in axes.items():
+        values = tuple(values)
+        if not values:
+            raise ValueError(f"sweep axis {field!r} has no values")
+        frozen.append((field, values))
+    return tuple(frozen)

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.devices import (
-    CBRAM, MRAM, PCM, RRAM, DeviceTech, custom_tech, get_tech,
+    CBRAM, MRAM, PCM, RRAM, custom_tech, get_tech,
 )
 
 

@@ -1,4 +1,3 @@
-import jax
 import pytest
 
 from repro.core import IMACConfig

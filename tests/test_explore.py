@@ -1,0 +1,254 @@
+"""repro.explore: spec materialization, batched-vs-loop equivalence,
+Pareto extraction, and on-disk memoization."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import IMACConfig
+from repro.core.evaluate import evaluate_batch, structure_key, sweep
+from repro.explore import (
+    ResultCache,
+    SweepSpec,
+    pareto_front,
+    pareto_mask,
+    run_sweep,
+)
+
+TOPOLOGY = [400, 48, 24, 10]
+
+
+# ------------------------------------------------------------------ spec
+
+
+def test_grid_spec_materializes_cross_product():
+    spec = SweepSpec.grid(
+        IMACConfig(), tech=["MRAM", "PCM"], array_size=[32, 64]
+    )
+    points = spec.materialize()
+    assert spec.n_points == len(points) == 4
+    names = [n for n, _ in points]
+    assert names[0] == "tech=MRAM,array_size=32"
+    cfg = dict(points)["tech=PCM,array_size=64"]
+    assert cfg.tech == "PCM"
+    assert (cfg.array_rows, cfg.array_cols) == (64, 64)
+
+
+def test_partition_axis_and_scalar_axis():
+    spec = SweepSpec.grid(
+        IMACConfig(),
+        partition=[([13, 4, 3], [4, 3, 1]), ([16, 8, 8], [8, 8, 1])],
+        r_tia=[5.0, 10.0],
+    )
+    points = spec.materialize()
+    assert len(points) == 4
+    cfg = points[0][1]
+    assert cfg.hp == [13, 4, 3] and cfg.vp == [4, 3, 1]
+    assert cfg.r_tia == 5.0
+
+
+def test_random_spec_is_seeded_and_sized():
+    spec = SweepSpec.random(
+        IMACConfig(), samples=7, seed=3, tech=["MRAM", "RRAM", "PCM"],
+        array_size=[32, 64, 128],
+    )
+    a = spec.materialize()
+    b = spec.materialize()
+    assert len(a) == 7
+    assert [n for n, _ in a] == [n for n, _ in b]  # deterministic
+
+
+def test_unknown_axis_raises():
+    with pytest.raises(ValueError, match="unknown sweep axis"):
+        SweepSpec.grid(IMACConfig(), not_a_field=[1]).materialize()
+
+
+# -------------------------------------------------------- structure_key
+
+
+def test_structure_key_groups_techs_not_sizes():
+    k_mram = structure_key(TOPOLOGY, IMACConfig(tech="MRAM"))
+    k_pcm = structure_key(TOPOLOGY, IMACConfig(tech="PCM"))
+    k_big = structure_key(TOPOLOGY, IMACConfig(tech="MRAM", array_rows=64,
+                                               array_cols=64))
+    assert k_mram == k_pcm
+    assert k_mram != k_big
+
+
+def test_evaluate_batch_rejects_incompatible(trained_tiny_mlp):
+    params, xte, yte = trained_tiny_mlp
+    with pytest.raises(ValueError, match="structurally-compatible"):
+        evaluate_batch(
+            params, xte, yte,
+            [IMACConfig(array_rows=32, array_cols=32),
+             IMACConfig(array_rows=64, array_cols=64)],
+            n_samples=4, chunk=4,
+        )
+
+
+# ------------------------------------------- batched vs per-config loop
+
+
+def test_batched_matches_per_config_loop_2x2(trained_tiny_mlp):
+    """The tentpole equivalence: a 2x2 (tech x array size) grid evaluated
+    by the engine matches the per-config loop."""
+    params, xte, yte = trained_tiny_mlp
+    spec = SweepSpec.grid(
+        IMACConfig(), tech=["MRAM", "PCM"], array_size=[32, 64]
+    )
+    items = spec.materialize()
+    loop = sweep(params, xte, yte, items, n_samples=16, chunk=16)
+    batched = run_sweep(params, xte, yte, spec, n_samples=16, chunk=16)
+    assert [r.name for r in batched] == [n for n, _ in loop]
+    for (_, want), got in zip(loop, batched):
+        assert got.result.accuracy == pytest.approx(want.accuracy, abs=1e-12)
+        assert got.result.avg_power == pytest.approx(want.avg_power, rel=1e-5)
+        assert got.result.latency == pytest.approx(want.latency, rel=1e-6)
+        np.testing.assert_allclose(
+            got.result.per_layer_power, want.per_layer_power, rtol=1e-5
+        )
+        assert got.result.hp == want.hp and got.result.vp == want.vp
+
+
+def test_batched_matches_loop_ideal_path(trained_tiny_mlp):
+    """parasitics=False (ideal MVM) exercise of the same stacking."""
+    params, xte, yte = trained_tiny_mlp
+    cfgs = [
+        (t, IMACConfig(tech=t, parasitics=False))
+        for t in ("MRAM", "RRAM", "CBRAM", "PCM")
+    ]
+    loop = sweep(params, xte, yte, cfgs, n_samples=64, chunk=32)
+    batched = run_sweep(params, xte, yte, cfgs, n_samples=64, chunk=32)
+    for (_, want), got in zip(loop, batched):
+        assert got.result.accuracy == pytest.approx(want.accuracy, abs=1e-12)
+        assert got.result.avg_power == pytest.approx(want.avg_power, rel=1e-5)
+
+
+# ----------------------------------------------------------------- pareto
+
+
+def test_pareto_mask_hand_built_frontier():
+    # (maximize, minimize): the frontier is the upper-left staircase.
+    pts = np.array([
+        [1.0, 1.0],   # front
+        [0.9, 0.5],   # front
+        [0.9, 0.9],   # dominated by (0.9, 0.5)
+        [0.5, 0.2],   # front
+        [0.4, 0.3],   # dominated by (0.5, 0.2)
+        [1.0, 2.0],   # dominated by (1.0, 1.0)
+    ])
+    mask = pareto_mask(pts, maximize=[True, False])
+    np.testing.assert_array_equal(
+        mask, [True, True, False, True, False, False]
+    )
+
+
+def test_pareto_mask_keeps_duplicates():
+    pts = np.array([[1.0, 1.0], [1.0, 1.0], [0.5, 2.0]])
+    mask = pareto_mask(pts, maximize=[True, False])
+    np.testing.assert_array_equal(mask, [True, True, False])
+
+
+def test_pareto_front_on_results():
+    class R:
+        def __init__(self, acc, p, lat):
+            self.accuracy, self.avg_power, self.latency = acc, p, lat
+
+    results = [
+        R(0.95, 1.0, 2e-8),   # dominated by r2 (same acc, cheaper)
+        R(0.95, 0.5, 2e-8),   # front
+        R(0.99, 2.0, 2e-8),   # front (best accuracy)
+        R(0.90, 0.4, 1e-8),   # front (cheapest + fastest)
+    ]
+    idx = pareto_front(results)
+    assert set(idx) == {1, 2, 3}
+    assert idx[0] == 2  # sorted by accuracy, best first
+
+
+def test_pareto_front_direction_validation():
+    with pytest.raises(ValueError, match="max"):
+        pareto_front([], objectives=(("accuracy", "up"),))
+
+
+# ------------------------------------------------------------------ cache
+
+
+def test_cache_hit_skips_solver(trained_tiny_mlp, tmp_path, monkeypatch):
+    params, xte, yte = trained_tiny_mlp
+    cfgs = [("pcm", IMACConfig(tech="PCM", parasitics=False))]
+    cache = ResultCache(str(tmp_path / "sweep"))
+    cold = run_sweep(
+        params, xte, yte, cfgs, n_samples=32, chunk=32, cache=cache
+    )
+    assert not cold[0].cached
+    assert cache.misses == 1 and len(cache) == 1
+
+    import repro.explore.engine as engine
+
+    def boom(*a, **k):
+        raise AssertionError("cache hit must not re-solve")
+
+    monkeypatch.setattr(engine, "evaluate_batch", boom)
+    warm = run_sweep(
+        params, xte, yte, cfgs, n_samples=32, chunk=32, cache=cache
+    )
+    assert warm[0].cached
+    assert warm[0].result == cold[0].result  # bit-identical via JSON round-trip
+
+
+def test_cache_key_sensitivity(trained_tiny_mlp, tmp_path):
+    params, xte, yte = trained_tiny_mlp
+    cache = ResultCache(str(tmp_path / "sweep"))
+    base = [("a", IMACConfig(tech="PCM", parasitics=False))]
+    run_sweep(params, xte, yte, base, n_samples=16, chunk=16, cache=cache)
+    # Different config or different n_samples must miss.
+    other = [("a", IMACConfig(tech="MRAM", parasitics=False))]
+    run_sweep(params, xte, yte, other, n_samples=16, chunk=16, cache=cache)
+    run_sweep(params, xte, yte, base, n_samples=8, chunk=16, cache=cache)
+    assert cache.misses == 3
+    assert len(cache) == 3
+    # A different digital-reference activation must also miss (it changes
+    # digital_accuracy in the stored result).
+    run_sweep(
+        params, xte, yte, base, n_samples=16, chunk=16, cache=cache,
+        activation="relu",
+    )
+    assert cache.misses == 4
+    assert len(cache) == 4
+
+
+# ------------------------------------------------------------ engine misc
+
+
+def test_run_sweep_accepts_bare_configs(trained_tiny_mlp):
+    params, xte, yte = trained_tiny_mlp
+    out = run_sweep(
+        params, xte, yte,
+        [IMACConfig(tech="PCM", parasitics=False)],
+        n_samples=8, chunk=8,
+    )
+    assert len(out) == 1 and out[0].name == "cfg0"
+    assert out[0].accuracy == out[0].result.accuracy  # attribute proxy
+
+
+def test_variation_key_is_paired_across_configs(trained_tiny_mlp):
+    """The same Monte-Carlo draw applies to every point in a sweep."""
+    import jax
+
+    from repro.core.devices import custom_tech
+
+    params, xte, yte = trained_tiny_mlp
+    noisy = custom_tech(5e3, 1e5, name="VAR", sigma_rel=0.05)
+    cfg = IMACConfig(tech=noisy, parasitics=False)
+    key = jax.random.PRNGKey(7)
+    solo = sweep(
+        params, xte, yte, [("v", cfg)], n_samples=16, chunk=16,
+        variation_key=key,
+    )[0][1]
+    pair = run_sweep(
+        params, xte, yte,
+        [("v", cfg), ("m", dataclasses.replace(cfg, tech="MRAM"))],
+        n_samples=16, chunk=16, variation_key=key,
+    )[0].result
+    assert pair.accuracy == pytest.approx(solo.accuracy, abs=1e-12)
+    assert pair.avg_power == pytest.approx(solo.avg_power, rel=1e-5)

@@ -1,7 +1,6 @@
 """HLO analysis parser: validated against unrolled-scan ground truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import collective_stats, compute_stats

@@ -13,7 +13,7 @@ from repro.core.netlist import (
     parse_tile_conductances,
 )
 from repro.core.partition import tile_matrix
-from repro.core.solver import CircuitParams, solve_dense_mna
+from repro.core.solver import solve_dense_mna
 
 
 @pytest.fixture(scope="module")

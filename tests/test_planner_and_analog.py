@@ -2,9 +2,7 @@
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, get_config
 from repro.core.planner import plan_arch

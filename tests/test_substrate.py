@@ -9,12 +9,12 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.data.synthetic_lm import DataConfig, Prefetcher, SyntheticLM
 from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update, make_schedule
 from repro.optim.adamw import dequantise, quantise
-from repro.sharding.rules import DEFAULT_RULES, logical_to_spec
+from repro.sharding.rules import logical_to_spec
 from repro.train import TrainConfig, Trainer, plan_mesh
 from repro.train.fault import StragglerWatchdog
 
@@ -334,7 +334,7 @@ def test_serving_matches_direct_decode():
 
 
 def test_compressed_allreduce_single_device():
-    from repro.distributed import CompressionState, compressed_allreduce, ef_state_init
+    from repro.distributed import compressed_allreduce, ef_state_init
 
     mesh = jax.make_mesh((1,), ("data",))
     grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 32))}

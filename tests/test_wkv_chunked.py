@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.rwkv6 import WKV_CHUNK, _wkv_chunked, _wkv_scan
