@@ -2,13 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 
-  table3   — paper Table III (partitioning design space)
-  table4   — paper Table IV (device technologies)
-  sweep    — batched exploration engine vs per-config loop (Table III x IV)
-  solver   — crossbar circuit-solver scaling (the adapted SPICE engine)
-  kernels  — Pallas kernel workloads (ref-path timings on CPU)
-  deploy   — IMAC deployment planning for the 10 assigned archs
-  roofline — (arch x shape x mesh) roofline table from dry-run artifacts
+  table3      — paper Table III (partitioning design space)
+  table4      — paper Table IV (device technologies)
+  sweep       — batched exploration engine vs per-config loop (Table III x IV)
+  variability — batched Monte-Carlo reliability engine vs per-trial loop
+  solver      — crossbar circuit-solver scaling (the adapted SPICE engine)
+  kernels     — Pallas kernel workloads (ref-path timings on CPU)
+  deploy      — IMAC deployment planning for the 10 assigned archs
+  roofline    — (arch x shape x mesh) roofline table from dry-run artifacts
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table3,table4,...]
 """
@@ -32,12 +33,14 @@ def main() -> None:
         sweep_bench,
         table3_partitioning,
         table4_device_tech,
+        variability_bench,
     )
 
     benches = {
         "table3": table3_partitioning.run,
         "table4": table4_device_tech.run,
         "sweep": sweep_bench.run,
+        "variability": variability_bench.run,
         "solver": solver_scaling.run,
         "kernels": kernels_bench.run,
         "deploy": deploy_report.run,

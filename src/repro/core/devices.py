@@ -67,6 +67,62 @@ class DeviceTech:
             g * jnp.exp(self.sigma_rel * noise), self.g_off, self.g_on
         )
 
+    def perturb_trials(self, keys: jax.Array, g: jax.Array) -> jax.Array:
+        """Vectorized `perturb`: one independent draw per stacked trial key.
+
+        `keys` is a (T, ...) stack of PRNG keys; the result is (T, *g.shape)
+        with trial t bitwise-identical to ``perturb(keys[t], g)`` — a
+        batched Monte-Carlo run therefore reproduces a per-trial loop
+        exactly for the same keys.
+        """
+        keys = jnp.asarray(keys)
+        n_trials = keys.shape[0]
+        if self.sigma_rel <= 0.0:
+            return jnp.broadcast_to(g, (n_trials,) + g.shape)
+        return jax.vmap(lambda k: self.perturb(k, g))(keys)
+
+
+def sample_stuck_faults(
+    key: jax.Array,
+    shape: "tuple[int, ...]",
+    p_stuck_on: float,
+    p_stuck_off: float,
+) -> "tuple[jax.Array, jax.Array]":
+    """Draw disjoint stuck-at fault masks for one device array.
+
+    Each device is independently stuck at G_on with probability
+    `p_stuck_on`, stuck at G_off with probability `p_stuck_off`, and
+    healthy otherwise (one uniform draw per device, so the two masks are
+    disjoint by construction).
+
+    Returns:
+      (stuck_on, stuck_off) boolean masks of the given shape.
+    """
+    if not (0.0 <= p_stuck_on <= 1.0 and 0.0 <= p_stuck_off <= 1.0):
+        raise ValueError(
+            f"fault rates must be probabilities, got {p_stuck_on}, {p_stuck_off}"
+        )
+    if p_stuck_on + p_stuck_off > 1.0:
+        raise ValueError(
+            f"p_stuck_on + p_stuck_off must be <= 1, got "
+            f"{p_stuck_on} + {p_stuck_off}"
+        )
+    u = jax.random.uniform(key, shape)
+    stuck_on = u < p_stuck_on
+    stuck_off = jnp.logical_and(u >= p_stuck_on, u < p_stuck_on + p_stuck_off)
+    return stuck_on, stuck_off
+
+
+def apply_stuck_faults(
+    g: jax.Array,
+    stuck_on: jax.Array,
+    stuck_off: jax.Array,
+    g_on: float,
+    g_off: float,
+) -> jax.Array:
+    """Clamp faulty devices to their stuck conductance level."""
+    return jnp.where(stuck_on, g_on, jnp.where(stuck_off, g_off, g))
+
 
 # Table IV of the paper -----------------------------------------------------
 MRAM = DeviceTech("MRAM", r_low=8.5e3, r_high=25.5e3)    # ref [4]

@@ -15,6 +15,7 @@ arbitrary configuration lists into compatible batches via `structure_key`.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -22,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.digital import Params, mlp_forward
 from repro.core.imac import IMACConfig, build_plans, layer_latency, linear_forward
-from repro.core.mapping import map_network
+from repro.core.mapping import MappedLayer, map_network
 from repro.core.solver import CircuitParams, suggest_iters
 
 
@@ -37,6 +38,60 @@ class IMACResult(NamedTuple):
     n_samples: int
     hp: tuple
     vp: tuple
+
+    # Degenerate-distribution aliases: a deterministic evaluation is a
+    # single-trial Monte-Carlo run (every accuracy quantile collapses to
+    # the point value, worst-case power is the only power). These mirror
+    # repro.variability.ReliabilityReport's fields so mixed
+    # deterministic + Monte-Carlo sweeps share Pareto objectives
+    # (explore.pareto.RELIABILITY_OBJECTIVES) and report code.
+    @property
+    def n_trials(self) -> int:
+        return 1
+
+    @property
+    def acc_mean(self) -> float:
+        return self.accuracy
+
+    @property
+    def acc_std(self) -> float:
+        return 0.0
+
+    @property
+    def acc_min(self) -> float:
+        return self.accuracy
+
+    @property
+    def acc_max(self) -> float:
+        return self.accuracy
+
+    @property
+    def acc_q05(self) -> float:
+        return self.accuracy
+
+    @property
+    def acc_q25(self) -> float:
+        return self.accuracy
+
+    @property
+    def acc_q50(self) -> float:
+        return self.accuracy
+
+    @property
+    def acc_q75(self) -> float:
+        return self.accuracy
+
+    @property
+    def acc_q95(self) -> float:
+        return self.accuracy
+
+    @property
+    def power_mean(self) -> float:
+        return self.avg_power
+
+    @property
+    def power_worst(self) -> float:
+        return self.avg_power
 
 
 def structure_key(topology: Sequence[int], cfg: IMACConfig) -> tuple:
@@ -65,6 +120,46 @@ def structure_key(topology: Sequence[int], cfg: IMACConfig) -> tuple:
     )
 
 
+def lift_mapped(mapped: "Sequence[MappedLayer]") -> "list[MappedLayer]":
+    """One configuration's mapping as a leading-axis-1 stacked mapping
+    (the `mapped_stacked` form of `evaluate_batch`)."""
+    return [
+        dataclasses.replace(
+            m,
+            g_pos=m.g_pos[None],
+            g_neg=m.g_neg[None],
+            k=jnp.asarray([m.k]),
+        )
+        for m in mapped
+    ]
+
+
+def concat_mapped(
+    stacks: "Sequence[Sequence[MappedLayer]]",
+) -> "list[MappedLayer]":
+    """Concatenate stacked mappings along the leading config axis.
+
+    Each element of `stacks` is a per-layer list of MappedLayer whose
+    arrays carry a leading (C_i,) axis (see `lift_mapped` /
+    repro.variability.expand_trials); the result stacks sum(C_i) entries.
+    """
+    stacks = list(stacks)
+    if len(stacks) == 1:
+        return list(stacks[0])
+    n_layers = len(stacks[0])
+    return [
+        dataclasses.replace(
+            stacks[0][layer],
+            g_pos=jnp.concatenate([s[layer].g_pos for s in stacks]),
+            g_neg=jnp.concatenate([s[layer].g_neg for s in stacks]),
+            k=jnp.concatenate(
+                [jnp.atleast_1d(jnp.asarray(s[layer].k)) for s in stacks]
+            ),
+        )
+        for layer in range(n_layers)
+    ]
+
+
 def evaluate_batch(
     params: Params,
     x: jax.Array,
@@ -75,8 +170,10 @@ def evaluate_batch(
     chunk: int = 256,
     variation_key: Optional[jax.Array] = None,
     noise_key: Optional[jax.Array] = None,
+    noise_per_config: bool = False,
     activation: str = "sigmoid",
     mapped: Optional[list] = None,
+    mapped_stacked: Optional[list] = None,
 ) -> "list[IMACResult]":
     """Evaluate many structurally-compatible IMAC configurations at once.
 
@@ -96,11 +193,22 @@ def evaluate_batch(
       chunk: samples per jitted circuit solve.
       variation_key: optional device-variation Monte-Carlo draw (the same
         draw is applied to every configuration, as in a paired sweep).
-      noise_key: optional read-noise draw (shared across configurations).
+      noise_key: optional read-noise draw (shared across configurations
+        unless `noise_per_config`).
+      noise_per_config: draw read noise independently per stacked
+        configuration instead of sharing one draw — used by the
+        Monte-Carlo reliability engine (repro.variability), where each
+        stacked entry is an independent trial.
       activation: digital reference activation.
       mapped: optional pre-computed mapWB output per configuration (one
         map_network list per config); lets a sweep engine share mappings
         between configurations that differ only in circuit parameters.
+      mapped_stacked: optional pre-STACKED mapping — one MappedLayer per
+        layer whose g_pos/g_neg carry a leading (C,) config axis and
+        whose k is a (C,) array. Bypasses the per-config stacking below;
+        the Monte-Carlo engine samples its trials directly in this form
+        (see repro.variability) so trial tensors are never materialized
+        twice. Mutually exclusive with `mapped`.
 
     Returns:
       One IMACResult per configuration, in input order.
@@ -139,28 +247,41 @@ def evaluate_batch(
     # mapWB per configuration (outside the trace, identical to the
     # single-config path), then stack: per layer (C, M, N) conductances
     # and (C,) sense scales; electrical scalars as (C,) vectors.
-    mapped_all = mapped if mapped is not None else [
-        map_network(
-            params,
-            c.resolved_tech(),
-            v_unit=c.vdd,
-            quantize=c.quantize,
-            variation_key=variation_key,
+    if mapped_stacked is not None:
+        if mapped is not None:
+            raise ValueError("pass either mapped or mapped_stacked, not both")
+        for m in mapped_stacked:
+            if m.g_pos.shape[0] != len(cfgs):
+                raise ValueError(
+                    f"mapped_stacked leading axis {m.g_pos.shape[0]} != "
+                    f"{len(cfgs)} configurations"
+                )
+        g_pos = tuple(m.g_pos for m in mapped_stacked)
+        g_neg = tuple(m.g_neg for m in mapped_stacked)
+        k = tuple(jnp.asarray(m.k, dtype) for m in mapped_stacked)
+    else:
+        mapped_all = mapped if mapped is not None else [
+            map_network(
+                params,
+                c.resolved_tech(),
+                v_unit=c.vdd,
+                quantize=c.quantize,
+                variation_key=variation_key,
+            )
+            for c in cfgs
+        ]
+        g_pos = tuple(
+            jnp.stack([m[layer].g_pos for m in mapped_all])
+            for layer in range(n_layers)
         )
-        for c in cfgs
-    ]
-    g_pos = tuple(
-        jnp.stack([m[layer].g_pos for m in mapped_all])
-        for layer in range(n_layers)
-    )
-    g_neg = tuple(
-        jnp.stack([m[layer].g_neg for m in mapped_all])
-        for layer in range(n_layers)
-    )
-    k = tuple(
-        jnp.asarray([m[layer].k for m in mapped_all], dtype)
-        for layer in range(n_layers)
-    )
+        g_neg = tuple(
+            jnp.stack([m[layer].g_neg for m in mapped_all])
+            for layer in range(n_layers)
+        )
+        k = tuple(
+            jnp.asarray([m[layer].k for m in mapped_all], dtype)
+            for layer in range(n_layers)
+        )
     scal = dict(
         r_seg=jnp.asarray([c.interconnect.r_segment for c in cfgs], dtype),
         r_source=jnp.asarray([c.r_source for c in cfgs], dtype),
@@ -209,6 +330,7 @@ def evaluate_batch(
                 is_output=(layer == n_layers - 1),
                 noise_key=keys[layer],
                 read_noise_rel=sc["read_noise"],
+                noise_per_config=noise_per_config,
                 dtype=dtype,
             )
             powers.append(jnp.mean(power, axis=-1))   # (C,)
@@ -239,19 +361,24 @@ def evaluate_batch(
     dig_acc = float(jnp.mean((dig_pred == y).astype(jnp.float32)))
 
     results = []
+    latency_memo: dict = {}
     for i, cfg in enumerate(cfgs):
         errors = int(jnp.sum((pred[i] != y).astype(jnp.int32)))
         # Latency is input-independent (structural): derived analytically.
-        latency = float(
-            sum(
-                jnp.asarray(
-                    layer_latency(p, cfg.interconnect, cfg.resolved_neuron()),
-                    dtype,
+        # Memoized by config identity — the T stacked trials of a
+        # Monte-Carlo point share one config object.
+        if id(cfg) not in latency_memo:
+            latency_memo[id(cfg)] = float(
+                sum(
+                    jnp.asarray(
+                        layer_latency(p, cfg.interconnect, cfg.resolved_neuron()),
+                        dtype,
+                    )
+                    for p in plans
                 )
-                for p in plans
+                + cfg.t_sampling
             )
-            + cfg.t_sampling
-        )
+        latency = latency_memo[id(cfg)]
         plp = per_layer_power[i]
         results.append(
             IMACResult(

@@ -14,7 +14,10 @@ Fast paths:
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Sequence
+from typing import TYPE_CHECKING, NamedTuple, Optional, Sequence
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only, avoids a cycle
+    from repro.variability.spec import VariabilitySpec
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +67,12 @@ class IMACConfig:
     gs_tol: float = 1e-6                 # early-exit sweep tolerance (V)
     t_sampling: float = 20e-9            # Table II: 20ns (printed as 20nm)
     dtype: jnp.dtype = jnp.float32
+    # Optional Monte-Carlo reliability analysis attached to this design
+    # point (repro.variability.VariabilitySpec). None = deterministic
+    # point evaluation. Does not affect the traced circuit structure —
+    # trials stack along the same leading config axis the design-space
+    # engine already batches over.
+    variability: "Optional[VariabilitySpec]" = None
 
     def resolved_tech(self) -> DeviceTech:
         return get_tech(self.tech)
@@ -132,6 +141,7 @@ def linear_forward(
     tridiag: TridiagFn = tridiag_scan,
     noise_key: Optional[jax.Array] = None,
     read_noise_rel: "jax.Array | float" = 0.0,
+    noise_per_config: bool = False,
     dtype: jnp.dtype = jnp.float32,
 ) -> "tuple[jax.Array, jax.Array, jax.Array, jax.Array]":
     """Functional core of one analog layer: crossbar solve + diff amp + neuron.
@@ -143,6 +153,11 @@ def linear_forward(
     then shares ONE circuit solve / ONE compilation
     (see core/evaluate.evaluate_batch). With 2-D conductances and float
     scalars this is exactly the single-configuration layer.
+
+    `noise_per_config` controls how read noise is drawn for stacked
+    batches: False (default) shares one draw across the leading config
+    axes — a paired design-space comparison; True draws independently
+    per stacked entry — what a Monte-Carlo trial axis wants.
 
     Returns:
       (activations, power, residual, z) — power is (..., batch), residual
@@ -176,9 +191,11 @@ def linear_forward(
         residual = jnp.max(sol.residual, axis=(-1, -2))
 
     if noise_key is not None:
-        # One draw shared by every stacked configuration — identical to
-        # evaluating each configuration separately with the same key.
-        noise = jax.random.normal(noise_key, i_diff.shape[-2:], dtype)
+        # Default: one draw shared by every stacked configuration —
+        # identical to evaluating each configuration separately with the
+        # same key. Per-config: independent noise along the leading axes.
+        shape = i_diff.shape if noise_per_config else i_diff.shape[-2:]
+        noise = jax.random.normal(noise_key, shape, dtype)
         rel = _align_leading(read_noise_rel, i_diff.ndim, dtype)
         scale = rel * jnp.maximum(jnp.abs(i_diff), 1e-12)
         i_diff = i_diff + scale * noise

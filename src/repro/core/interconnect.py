@@ -5,8 +5,10 @@ bitcell pitch and the interconnect's resistivity / thickness / width. The
 paper prints rho = 1.9e9 ohm.m, an obvious exponent typo: a copper-like
 back-end-of-line interconnect is ~1.9e-8 ohm.m, which with the printed
 geometry gives ~13.8 ohm per bitcell segment — consistent with the IR-drop
-results of the paper and of its ref [2]. We use 1.9e-8 (documented in
-DESIGN.md §9).
+results of the paper and of its ref [2], whereas the literal value would
+make a single segment ~1e17 ohm and no current would flow at all. We use
+1.9e-8; tests/test_substrate.py pins r_segment ~= 13.8 ohm so the
+correction cannot silently regress.
 """
 from __future__ import annotations
 

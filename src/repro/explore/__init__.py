@@ -9,6 +9,12 @@ exploration — as a first-class engine:
   pareto.pareto_front   non-dominated (accuracy, power, latency) points
   cache.ResultCache     on-disk result memoization
 
+Reliability sweeps: SweepSpec's `trials`/`sigma_rel`/`fault_rate`/...
+axes attach a repro.variability.VariabilitySpec to each point; run_sweep
+then batches every point's Monte-Carlo trials into the same structure-
+grouped solves and returns ReliabilityReports, extractable with
+pareto.RELIABILITY_OBJECTIVES (acc_q05 / power_worst / latency).
+
 Example::
 
     from repro.explore import SweepSpec, explore
@@ -23,11 +29,17 @@ Example::
 """
 from repro.explore.cache import ResultCache
 from repro.explore.engine import SweepResult, explore, run_sweep
-from repro.explore.pareto import DEFAULT_OBJECTIVES, pareto_front, pareto_mask
+from repro.explore.pareto import (
+    DEFAULT_OBJECTIVES,
+    RELIABILITY_OBJECTIVES,
+    pareto_front,
+    pareto_mask,
+)
 from repro.explore.spec import SweepSpec
 
 __all__ = [
     "DEFAULT_OBJECTIVES",
+    "RELIABILITY_OBJECTIVES",
     "ResultCache",
     "SweepResult",
     "SweepSpec",

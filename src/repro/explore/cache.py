@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.evaluate import IMACResult
 from repro.core.imac import IMACConfig
+from repro.variability.report import ReliabilityReport
 
 
 def _canonical(obj):
@@ -86,7 +87,11 @@ def result_key(
     noise_key=None,
     activation: str = "sigmoid",
 ) -> str:
-    """Cache key for one (config, params, data, eval-args) evaluation."""
+    """Cache key for one (config, params, data, eval-args) evaluation.
+
+    Reliability points (cfg.variability set) should be keyed with
+    variation_key/noise_key = None: their results derive entirely from
+    the spec's seed (see repro.explore.engine.run_sweep)."""
     payload = json.dumps(
         {
             "config": _canonical(cfg),
@@ -115,7 +120,7 @@ class ResultCache:
     def _file(self, key: str) -> str:
         return os.path.join(self.path, f"{key}.json")
 
-    def get(self, key: str) -> Optional[IMACResult]:
+    def get(self, key: str) -> "Optional[IMACResult | ReliabilityReport]":
         f = self._file(key)
         if not os.path.exists(f):
             self.misses += 1
@@ -124,6 +129,12 @@ class ResultCache:
             payload = json.load(fh)
         r = payload["result"]
         self.hits += 1
+        if payload.get("kind", "imac") == "reliability":
+            # JSON round-trip turns tuples into lists; restore them.
+            return ReliabilityReport(**{
+                k: tuple(v) if isinstance(v, list) else v
+                for k, v in r.items()
+            })
         return IMACResult(
             accuracy=r["accuracy"],
             error_rate=r["error_rate"],
@@ -137,8 +148,16 @@ class ResultCache:
             vp=tuple(r["vp"]),
         )
 
-    def put(self, key: str, result: IMACResult, name: str = "") -> None:
-        payload = {"name": name, "result": result._asdict()}
+    def put(
+        self,
+        key: str,
+        result: "IMACResult | ReliabilityReport",
+        name: str = "",
+    ) -> None:
+        kind = (
+            "reliability" if isinstance(result, ReliabilityReport) else "imac"
+        )
+        payload = {"name": name, "kind": kind, "result": result._asdict()}
         tmp = self._file(key) + ".tmp"
         with open(tmp, "w") as fh:
             json.dump(payload, fh)

@@ -16,6 +16,16 @@ Takes an arbitrary list of (name, IMACConfig) points — usually from a
 On the paper's Table III x Table IV cross product (24 configurations,
 6 structures) this replaces 24 XLA compilations with 6; see
 benchmarks/sweep_bench.py for the measured wall-clock win.
+
+Points whose configuration carries a `VariabilitySpec`
+(`cfg.variability`, usually set by SweepSpec's `trials`/`sigma_rel`/
+`fault_rate`/... axes) are Monte-Carlo reliability points: each expands
+into T stacked trial entries (repro.variability.expand_trials) that join
+its structure group's single batched solve, and collapses back into a
+`ReliabilityReport` instead of a point `IMACResult`. A sweep over
+C configurations x T trials therefore still compiles once per structure
+group. Use `pareto.RELIABILITY_OBJECTIVES` to extract fronts over
+accuracy quantiles / worst-case power instead of point values.
 """
 from __future__ import annotations
 
@@ -26,7 +36,13 @@ from typing import Optional, Sequence, Union
 import jax
 
 from repro.core.digital import Params
-from repro.core.evaluate import IMACResult, evaluate_batch, structure_key
+from repro.core.evaluate import (
+    IMACResult,
+    concat_mapped,
+    evaluate_batch,
+    lift_mapped,
+    structure_key,
+)
 from repro.core.imac import IMACConfig
 from repro.core.mapping import map_network
 from repro.explore.cache import (
@@ -37,17 +53,23 @@ from repro.explore.cache import (
 )
 from repro.explore.pareto import DEFAULT_OBJECTIVES, pareto_front
 from repro.explore.spec import SweepSpec
+from repro.variability.engine import expand_trials, run_variability, trial_keys
+from repro.variability.report import ReliabilityReport, summarize
 
 SweepInput = Union[SweepSpec, Sequence]
 
 
 @dataclasses.dataclass
 class SweepResult:
-    """One evaluated design point."""
+    """One evaluated design point.
+
+    `result` is an IMACResult for deterministic points, or a
+    ReliabilityReport for Monte-Carlo points (cfg.variability set).
+    """
 
     name: str
     config: IMACConfig
-    result: IMACResult
+    result: "IMACResult | ReliabilityReport"
     cached: bool = False
 
     def __getattr__(self, attr):
@@ -91,11 +113,19 @@ def run_sweep(
       params: trained digital weights/biases [(W, b), ...].
       x, y: evaluation data (digital units / integer labels).
       points: a SweepSpec, or a sequence of IMACConfig or (name, config).
+        Points whose config carries a VariabilitySpec evaluate as
+        Monte-Carlo reliability points (ReliabilityReport results); their
+        trials — including read-noise draws when the resolved technology
+        has read_noise_rel > 0 — derive from the spec's own seed,
+        independent of `variation_key`/`noise_key`, so a point evaluated
+        here matches a direct run_variability call exactly.
       n_samples: samples per evaluation (default: all of x).
       chunk: samples per jitted solve.
       cache: ResultCache instance, a directory path to open one, or None.
-      variation_key / noise_key: Monte-Carlo draws shared by every point
-        (paired comparison across the design space).
+      variation_key / noise_key: Monte-Carlo draws shared by every
+        deterministic point (paired comparison across the design space).
+        Reliability points ignore both — see `points` above — so their
+        cache entries survive changes to either.
       activation: digital reference activation.
       verbose: print per-group progress lines.
 
@@ -118,14 +148,18 @@ def run_sweep(
             x[: n_samples or x.shape[0]], y[: n_samples or y.shape[0]]
         )
         for i, (name, cfg) in enumerate(items):
+            # Reliability points draw everything from their spec's seed,
+            # so their results — and cache keys — are independent of the
+            # sweep-level Monte-Carlo keys.
+            is_mc = cfg.variability is not None
             keys[i] = result_key(
                 cfg,
                 params_fp,
                 data_fp,
                 n_samples=n_samples,
                 chunk=chunk,
-                variation_key=variation_key,
-                noise_key=noise_key,
+                variation_key=None if is_mc else variation_key,
+                noise_key=None if is_mc else noise_key,
                 activation=activation,
             )
             hit = cache.get(keys[i])
@@ -143,14 +177,16 @@ def run_sweep(
 
     # mapWB depends only on (tech, vdd, quantize) for fixed params, so a
     # sweep over P partitionings x T technologies needs T mappings, not
-    # P*T — memoize across groups.
+    # P*T — memoize across groups. Monte-Carlo points share the same memo
+    # for their deterministic base mapping (variation is drawn per trial,
+    # not via the sweep-wide variation_key).
     mapping_memo: dict = {}
 
-    def _mapped(cfg: IMACConfig):
-        tech = cfg.resolved_tech()
+    def _mapped(cfg: IMACConfig, tech=None, vkey=variation_key):
+        tech = tech if tech is not None else cfg.resolved_tech()
         memo_key = (
             tech.name, tech.r_low, tech.r_high, tech.levels, tech.sigma_rel,
-            cfg.vdd, cfg.quantize,
+            cfg.vdd, cfg.quantize, vkey is None,
         )
         if memo_key not in mapping_memo:
             mapping_memo[memo_key] = map_network(
@@ -158,34 +194,86 @@ def run_sweep(
                 tech,
                 v_unit=cfg.vdd,
                 quantize=cfg.quantize,
-                variation_key=variation_key,
+                variation_key=vkey,
             )
         return mapping_memo[memo_key]
 
-    # 3. One batched solve per group.
+    # 3. One batched solve per group. Deterministic points contribute one
+    # stacked entry each; Monte-Carlo points contribute their T trial
+    # entries — all sharing the group's single compiled solve. Exception:
+    # Monte-Carlo points whose resolved technology has read noise run
+    # solo through run_variability so their per-trial noise draws depend
+    # only on the spec's seed (not on the point's position in the stack)
+    # — identical results to a direct run_variability call, and safe to
+    # memoize across differently-composed sweeps.
     for gi, (skey, idxs) in enumerate(groups.items()):
         t0 = time.perf_counter()
+        entry_cfgs, stacks, spans, solo = [], [], [], []
+        for i in idxs:
+            cfg = items[i][1]
+            vspec = cfg.variability
+            if vspec is None:
+                entry_cfgs.append(cfg)
+                stacks.append(lift_mapped(_mapped(cfg)))
+                spans.append((i, 1, None))
+                continue
+            base_tech = vspec.resolve_tech(cfg.resolved_tech())
+            if base_tech.read_noise_rel > 0.0:
+                solo.append(i)
+                continue
+            # Degenerate spec: all trials identical -> one stacked entry,
+            # replicated back to T at summarize time.
+            collapse = (
+                vspec.trials > 1
+                and vspec.is_deterministic_for(cfg.resolved_tech())
+            )
+            tcfgs, tstacked = expand_trials(
+                params, cfg, vspec,
+                keys=trial_keys(vspec)[:1] if collapse else None,
+                base_mapped=_mapped(cfg, tech=base_tech, vkey=None),
+            )
+            entry_cfgs.extend(tcfgs)
+            stacks.append(tstacked)
+            spans.append((i, len(tcfgs), vspec))
         batch = evaluate_batch(
             params,
             x,
             y,
-            [items[i][1] for i in idxs],
+            entry_cfgs,
             n_samples=n_samples,
             chunk=chunk,
             variation_key=variation_key,
             noise_key=noise_key,
             activation=activation,
-            mapped=[_mapped(items[i][1]) for i in idxs],
-        )
+            mapped_stacked=concat_mapped(stacks) if stacks else None,
+        ) if entry_cfgs else []
+        for i in solo:
+            name, cfg = items[i]
+            rep = run_variability(
+                params, x, y, cfg, cfg.variability,
+                n_samples=n_samples, chunk=chunk, activation=activation,
+            )
+            results[i] = SweepResult(name, cfg, rep, cached=False)
+            if cache is not None:
+                cache.put(keys[i], rep, name=name)
         if verbose:
             dt = time.perf_counter() - t0
             print(
                 f"[explore] group {gi + 1}/{len(groups)}: "
-                f"{len(idxs)} configs in {dt:.2f}s "
-                f"(plans {skey[1]})"
+                f"{len(idxs)} configs ({len(entry_cfgs)} stacked entries, "
+                f"{len(solo)} solo) in {dt:.2f}s (plans {skey[1]})"
             )
-        for i, res in zip(idxs, batch):
+        pos = 0
+        for i, count, vspec in spans:
             name, cfg = items[i]
+            if vspec is None:
+                res = batch[pos]
+            else:
+                trials = batch[pos : pos + count]
+                if count == 1 and vspec.trials > 1:  # collapsed degenerate
+                    trials = trials * vspec.trials
+                res = summarize(trials, acc_threshold=vspec.acc_threshold)
+            pos += count
             results[i] = SweepResult(name, cfg, res, cached=False)
             if cache is not None:
                 cache.put(keys[i], res, name=name)

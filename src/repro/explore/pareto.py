@@ -18,6 +18,18 @@ DEFAULT_OBJECTIVES = (
     ("latency", "min"),
 )
 
+# Yield-aware objectives for Monte-Carlo reliability sweeps
+# (repro.variability.ReliabilityReport results): trade the accuracy a
+# design delivers in its bad tail (5th percentile across variation
+# trials) against worst-case power — robust-design extraction instead of
+# point-estimate extraction. ReliabilityReport also proxies
+# accuracy/avg_power to trial means, so DEFAULT_OBJECTIVES work too.
+RELIABILITY_OBJECTIVES = (
+    ("acc_q05", "max"),
+    ("power_worst", "min"),
+    ("latency", "min"),
+)
+
 
 def pareto_mask(points: np.ndarray, maximize: "Sequence[bool]") -> np.ndarray:
     """Boolean mask of non-dominated rows.

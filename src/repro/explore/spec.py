@@ -4,10 +4,20 @@ A `SweepSpec` names a base `IMACConfig` and a set of axes; materializing
 it yields `(name, IMACConfig)` points — the full cross product for grid
 mode, or `samples` independent draws for random mode. Axes address
 `IMACConfig` fields directly (`tech`, `array_rows`, `r_source`, ...) plus
-two compound conveniences:
+compound conveniences:
 
   * ``array_size=n``       -> ``array_rows=n, array_cols=n``
   * ``partition=(hp, vp)`` -> ``hp=hp, vp=vp`` (per-layer lists)
+
+Monte-Carlo reliability axes attach a `VariabilitySpec` to each point
+(creating a default one on first use), turning the sweep into a
+reliability sweep whose points evaluate to `ReliabilityReport`s:
+
+  * ``trials``, ``mc_seed``, ``sigma_rel``, ``levels``,
+    ``read_noise_rel``, ``p_stuck_on``, ``p_stuck_off``,
+    ``acc_threshold``  -> the matching VariabilitySpec field
+  * ``fault_rate=r``   -> ``p_stuck_on=r/2, p_stuck_off=r/2``
+  * ``variability``    -> a whole VariabilitySpec (or None) per value
 
 Example::
 
@@ -17,6 +27,13 @@ Example::
         array_size=[32, 64, 128],
     )
     points = spec.materialize()   # 12 named IMACConfigs
+
+    reliability = SweepSpec.grid(
+        IMACConfig(),
+        tech=["MRAM", "PCM"],
+        sigma_rel=[0.05, 0.10, 0.20],
+        trials=[32],
+    )                             # 6 Monte-Carlo design points
 """
 from __future__ import annotations
 
@@ -27,6 +44,26 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.imac import IMACConfig
+from repro.variability.spec import VariabilitySpec
+
+# Axis name -> VariabilitySpec field for the reliability conveniences.
+_VARIABILITY_AXES = {
+    "trials": "trials",
+    "mc_seed": "seed",
+    "sigma_rel": "sigma_rel",
+    "levels": "levels",
+    "read_noise_rel": "read_noise_rel",
+    "p_stuck_on": "p_stuck_on",
+    "p_stuck_off": "p_stuck_off",
+    "acc_threshold": "acc_threshold",
+}
+
+
+def _with_variability(cfg: IMACConfig, **fields) -> IMACConfig:
+    vspec = cfg.variability or VariabilitySpec()
+    return dataclasses.replace(
+        cfg, variability=dataclasses.replace(vspec, **fields)
+    )
 
 
 def _apply_axis(cfg: IMACConfig, field: str, value) -> IMACConfig:
@@ -38,10 +75,17 @@ def _apply_axis(cfg: IMACConfig, field: str, value) -> IMACConfig:
     if field == "partition":
         hp, vp = value
         return dataclasses.replace(cfg, hp=list(hp), vp=list(vp))
+    if field == "fault_rate":
+        return _with_variability(
+            cfg, p_stuck_on=value / 2.0, p_stuck_off=value / 2.0
+        )
+    if field in _VARIABILITY_AXES:
+        return _with_variability(cfg, **{_VARIABILITY_AXES[field]: value})
     if not hasattr(cfg, field):
         raise ValueError(
             f"unknown sweep axis {field!r}: not an IMACConfig field "
-            f"(compound axes: 'array_size', 'partition')"
+            f"(compound axes: 'array_size', 'partition', 'fault_rate', "
+            f"{sorted(_VARIABILITY_AXES)})"
         )
     return dataclasses.replace(cfg, **{field: value})
 
@@ -52,6 +96,14 @@ def _fmt(value) -> str:
         return "x".join(_fmt(v) for v in value)
     if isinstance(value, float):
         return f"{value:g}"
+    if isinstance(value, VariabilitySpec):
+        # Non-default fields only: mc(trials=16,sigma_rel=0.1).
+        diffs = [
+            f"{f.name}={_fmt(getattr(value, f.name))}"
+            for f in dataclasses.fields(value)
+            if getattr(value, f.name) != f.default
+        ]
+        return f"mc({','.join(diffs)})" if diffs else "mc()"
     return str(value)
 
 

@@ -1,0 +1,37 @@
+"""Batched Monte-Carlo reliability analysis for IMAC designs.
+
+The yield-style question behind IMAC-Sim's device-variation story —
+"across programming variation, quantization, read noise and stuck-at
+faults, what accuracy distribution does this design actually deliver?" —
+answered with one jitted circuit solve over a stacked trial axis:
+
+  spec.VariabilitySpec     trials, seed, non-ideality overrides, fault rates
+  engine.run_variability   T trials -> one batched solve -> ReliabilityReport
+  engine.expand_trials     trial expansion reused by repro.explore groups
+  report.ReliabilityReport accuracy quantiles, worst-case power, yield
+
+Example::
+
+    from repro.variability import VariabilitySpec, run_variability
+
+    spec = VariabilitySpec(trials=32, sigma_rel=0.1, p_stuck_off=1e-3)
+    report = run_variability(params, x, y, cfg, spec, n_samples=256)
+    print(report.acc_mean, report.acc_q05, report.yield_frac)
+
+Reliability sweeps across the design space go through `repro.explore`:
+`SweepSpec` accepts `trials`/`sigma_rel`/`fault_rate`/... axes which
+attach a VariabilitySpec to each point, and `run_sweep` batches all
+trials of all structurally-compatible points into single solves.
+"""
+from repro.variability.engine import expand_trials, run_variability, trial_keys
+from repro.variability.report import ReliabilityReport, summarize
+from repro.variability.spec import VariabilitySpec
+
+__all__ = [
+    "ReliabilityReport",
+    "VariabilitySpec",
+    "expand_trials",
+    "run_variability",
+    "summarize",
+    "trial_keys",
+]

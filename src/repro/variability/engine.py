@@ -1,0 +1,220 @@
+"""Batched Monte-Carlo reliability engine.
+
+IMAC-Sim's yield question — "how does this design behave across device
+variation draws?" — used to be answered by a Python loop: redraw, remap,
+re-simulate, T times, re-tracing and re-compiling the circuit solve per
+trial. Here the T trials are drawn as a stacked leading axis (vectorized
+lognormal programming variation, level quantization and stuck-at fault
+masks over per-trial PRNG keys) and the whole batch runs through ONE
+jitted circuit solve via `core.evaluate.evaluate_batch` — the same
+leading-config-axis machinery the design-space engine uses, because a
+Monte-Carlo run IS a batch of structurally-identical configurations that
+differ only in conductance leaves.
+
+Trial sampling mirrors `core.mapping.map_network`'s key derivation
+exactly (split per layer, then per differential polarity), so trial t of
+a batched run is bitwise-identical to a per-trial
+``test_imac(..., variation_key=keys[t])`` loop for the same keys — see
+tests/test_variability.py and benchmarks/variability_bench.py. One
+deliberate difference: when the resolved technology has read noise, the
+engine injects an independent spec-seeded draw per trial, which the old
+loop (variation_key only, no noise_key) never drew at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.devices import apply_stuck_faults, sample_stuck_faults
+from repro.core.digital import Params
+from repro.core.evaluate import evaluate_batch
+from repro.core.imac import IMACConfig
+from repro.core.mapping import MappedLayer, map_network
+from repro.variability.report import ReliabilityReport, summarize
+from repro.variability.spec import VariabilitySpec
+
+# Distinct fold_in tags so the fault and read-noise streams never collide
+# with the programming-variation stream (which consumes the raw trial
+# key exactly like map_network does).
+_FAULT_SALT = 0x0FA17
+_NOISE_SALT = 0x0A01E
+
+
+def trial_keys(spec: VariabilitySpec) -> jax.Array:
+    """The T per-trial PRNG keys implied by the spec's seed."""
+    return jax.random.split(jax.random.PRNGKey(spec.seed), spec.trials)
+
+
+def reliability_noise_key(spec: VariabilitySpec) -> jax.Array:
+    """The read-noise key a reliability run derives from its spec's seed.
+
+    Shared by run_variability and the design-space engine so a point
+    evaluated through either path reports identical numbers."""
+    return jax.random.fold_in(jax.random.PRNGKey(spec.seed), _NOISE_SALT)
+
+
+def sample_trial_layers(
+    base: "Sequence[MappedLayer]",
+    tech,
+    spec: VariabilitySpec,
+    keys: jax.Array,
+) -> "list[tuple[jax.Array, jax.Array]]":
+    """Draw T stacked variation trials of a mapped network.
+
+    Args:
+      base: the deterministic mapWB output (quantized, unperturbed).
+      tech: resolved technology (after spec overrides).
+      spec: fault-injection rates.
+      keys: (T, 2) stacked trial keys.
+
+    Returns:
+      Per layer, (g_pos, g_neg) arrays of shape (T, fan_in+1, fan_out);
+      trial t is bitwise-identical to
+      ``map_network(..., variation_key=keys[t])`` when faults are off.
+    """
+    keys = jnp.asarray(keys)
+    n_layers = len(base)
+    # (T, L, 2): the same split map_network applies to a variation_key.
+    layer_keys = jax.vmap(lambda k: jax.random.split(k, n_layers))(keys)
+    if spec.has_faults:
+        fault_keys = jax.vmap(
+            lambda k: jax.random.split(jax.random.fold_in(k, _FAULT_SALT), n_layers)
+        )(keys)
+
+    def faulted(g, fkeys):
+        def one(k, g1):
+            on, off = sample_stuck_faults(
+                k, g1.shape, spec.p_stuck_on, spec.p_stuck_off
+            )
+            return apply_stuck_faults(g1, on, off, tech.g_on, tech.g_off)
+
+        return jax.vmap(one)(fkeys, g)
+
+    stacked = []
+    for layer, m in enumerate(base):
+        # (T, 2, 2): per-polarity keys, as map_wb's split(variation_key).
+        kpn = jax.vmap(jax.random.split)(layer_keys[:, layer])
+        g_pos = tech.perturb_trials(kpn[:, 0], m.g_pos)
+        g_neg = tech.perturb_trials(kpn[:, 1], m.g_neg)
+        if spec.has_faults:
+            fpn = jax.vmap(jax.random.split)(fault_keys[:, layer])
+            g_pos = faulted(g_pos, fpn[:, 0])
+            g_neg = faulted(g_neg, fpn[:, 1])
+        stacked.append((g_pos, g_neg))
+    return stacked
+
+
+def expand_trials(
+    params: Params,
+    cfg: IMACConfig,
+    spec: VariabilitySpec,
+    *,
+    keys: Optional[jax.Array] = None,
+    base_mapped: Optional[list] = None,
+) -> "tuple[list[IMACConfig], list[MappedLayer]]":
+    """Expand one design point into its T Monte-Carlo trial entries.
+
+    Returns (cfgs, mapped_stacked) ready for `evaluate_batch`: T copies
+    of the configuration (tech overrides applied, `variability` cleared)
+    and a per-layer list of MappedLayer whose g_pos/g_neg carry the
+    (T, ...) stacked trial draws (variation + fault masks) and whose k is
+    the (T,) sense scale — the trial tensors are sampled directly in the
+    form the batched solve consumes, never materialized per trial. The
+    design-space engine concatenates these with ordinary point entries
+    (core.evaluate.lift_mapped / concat_mapped) to run mixed groups in
+    one solve.
+    """
+    tech = spec.resolve_tech(cfg.resolved_tech())
+    cfg_t = dataclasses.replace(cfg, tech=tech, variability=None)
+    base = (
+        base_mapped
+        if base_mapped is not None
+        else map_network(params, tech, v_unit=cfg.vdd, quantize=cfg.quantize)
+    )
+    keys = trial_keys(spec) if keys is None else jnp.asarray(keys)
+    n_trials = keys.shape[0]
+    stacked = sample_trial_layers(base, tech, spec, keys)
+    mapped_stacked = [
+        dataclasses.replace(
+            base[layer],
+            g_pos=gp,
+            g_neg=gn,
+            k=jnp.full((n_trials,), base[layer].k),
+        )
+        for layer, (gp, gn) in enumerate(stacked)
+    ]
+    return [cfg_t] * n_trials, mapped_stacked
+
+
+def run_variability(
+    params: Params,
+    x: jax.Array,
+    y: jax.Array,
+    cfg: IMACConfig,
+    spec: Optional[VariabilitySpec] = None,
+    *,
+    keys: Optional[jax.Array] = None,
+    n_samples: Optional[int] = None,
+    chunk: int = 256,
+    noise_key: Optional[jax.Array] = None,
+    activation: str = "sigmoid",
+) -> ReliabilityReport:
+    """Batched Monte-Carlo reliability analysis of one design point.
+
+    Draws T variation trials (lognormal programming variation, level
+    quantization, Gaussian read noise, stuck-at fault injection per
+    `spec`) as a stacked leading axis and runs them through one jitted
+    circuit solve instead of T separate `test_imac` calls.
+
+    Args:
+      params: trained digital weights/biases [(W, b), ...].
+      x, y: evaluation data (digital units / integer labels).
+      cfg: the design point. `cfg.variability` is used when `spec` is
+        None and the config carries one.
+      spec: the Monte-Carlo specification (trials, seed, overrides).
+      keys: optional explicit (T, 2) per-trial PRNG keys — overrides
+        `spec.trials`/`spec.seed`; trial t then reproduces
+        ``test_imac(..., variation_key=keys[t])`` bitwise.
+      n_samples: samples per trial evaluation (default: all of x).
+      chunk: samples per jitted solve.
+      noise_key: read-noise draw; auto-derived from `spec.seed` when the
+        resolved technology has read noise and no key is given. Noise is
+        drawn independently per trial (`noise_per_config`).
+      activation: digital reference activation.
+
+    Returns:
+      ReliabilityReport with accuracy distribution, worst-case power and
+      yield P(acc >= spec.acc_threshold).
+    """
+    if spec is None:
+        spec = cfg.variability or VariabilitySpec()
+    # Degenerate specs (no variation, no noise, no faults) make all T
+    # trials bitwise identical — solve once and replicate the result.
+    collapse = (
+        keys is None
+        and spec.trials > 1
+        and spec.is_deterministic_for(cfg.resolved_tech())
+    )
+    if collapse:
+        keys = trial_keys(spec)[:1]
+    cfgs, mapped_stacked = expand_trials(params, cfg, spec, keys=keys)
+    if noise_key is None and cfgs[0].resolved_tech().read_noise_rel > 0.0:
+        noise_key = reliability_noise_key(spec)
+    results = evaluate_batch(
+        params,
+        x,
+        y,
+        cfgs,
+        n_samples=n_samples,
+        chunk=chunk,
+        noise_key=noise_key,
+        noise_per_config=True,
+        activation=activation,
+        mapped_stacked=mapped_stacked,
+    )
+    if collapse:
+        results = results * spec.trials
+    return summarize(results, acc_threshold=spec.acc_threshold)

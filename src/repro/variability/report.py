@@ -1,0 +1,107 @@
+"""Yield-style summary statistics of a Monte-Carlo reliability run.
+
+A `ReliabilityReport` condenses T per-trial `IMACResult`s into the
+distributional quantities a designer actually asks for: accuracy
+mean/std/min/max and quantiles, worst-case power, and the yield
+P(accuracy >= threshold). It proxies `accuracy`/`avg_power` to the trial
+means so every consumer of point results — the Pareto extractor, report
+printers — works on reliability results unchanged, while quantile-aware
+objectives (repro.explore.pareto.RELIABILITY_OBJECTIVES) can address
+`acc_q05`/`power_worst` directly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from repro.core.evaluate import IMACResult
+
+# Fixed quantile grid: (attribute suffix, quantile).
+ACC_QUANTILES = (
+    ("q05", 0.05),
+    ("q25", 0.25),
+    ("q50", 0.50),
+    ("q75", 0.75),
+    ("q95", 0.95),
+)
+
+
+class ReliabilityReport(NamedTuple):
+    """Distributional statistics over T Monte-Carlo variation trials."""
+
+    n_trials: int
+    acc_mean: float
+    acc_std: float
+    acc_min: float
+    acc_max: float
+    acc_q05: float
+    acc_q25: float
+    acc_q50: float
+    acc_q75: float
+    acc_q95: float
+    acc_threshold: float      # the yield bar
+    yield_frac: float         # P(accuracy >= acc_threshold)
+    power_mean: float         # W, mean over trials of per-trial avg power
+    power_worst: float        # W, worst trial
+    latency: float            # s, structural (identical across trials)
+    digital_accuracy: float   # float-model reference
+    worst_residual: float     # worst solver residual across trials
+    n_samples: int
+    per_trial_accuracy: tuple
+    per_trial_power: tuple
+    hp: tuple
+    vp: tuple
+
+    # IMACResult-compatible aliases: point-result consumers (default
+    # Pareto objectives, report tables) read the trial means.
+    @property
+    def accuracy(self) -> float:
+        return self.acc_mean
+
+    @property
+    def avg_power(self) -> float:
+        return self.power_mean
+
+    @property
+    def error_rate(self) -> float:
+        return 1.0 - self.acc_mean
+
+
+def summarize(
+    results: "Sequence[IMACResult]",
+    *,
+    acc_threshold: float = 0.9,
+) -> ReliabilityReport:
+    """Condense per-trial IMACResults into a ReliabilityReport."""
+    if not results:
+        raise ValueError("need at least one trial result to summarize")
+    accs = np.array([r.accuracy for r in results], dtype=float)
+    powers = np.array([r.avg_power for r in results], dtype=float)
+    q = {
+        name: float(np.quantile(accs, frac)) for name, frac in ACC_QUANTILES
+    }
+    return ReliabilityReport(
+        n_trials=len(results),
+        acc_mean=float(accs.mean()),
+        acc_std=float(accs.std()),
+        acc_min=float(accs.min()),
+        acc_max=float(accs.max()),
+        acc_q05=q["q05"],
+        acc_q25=q["q25"],
+        acc_q50=q["q50"],
+        acc_q75=q["q75"],
+        acc_q95=q["q95"],
+        acc_threshold=acc_threshold,
+        yield_frac=float(np.mean(accs >= acc_threshold)),
+        power_mean=float(powers.mean()),
+        power_worst=float(powers.max()),
+        latency=results[0].latency,
+        digital_accuracy=results[0].digital_accuracy,
+        worst_residual=float(max(r.worst_residual for r in results)),
+        n_samples=results[0].n_samples,
+        per_trial_accuracy=tuple(float(a) for a in accs),
+        per_trial_power=tuple(float(p) for p in powers),
+        hp=tuple(results[0].hp),
+        vp=tuple(results[0].vp),
+    )

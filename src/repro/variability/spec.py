@@ -1,0 +1,87 @@
+"""Declarative specification of a Monte-Carlo reliability analysis.
+
+A `VariabilitySpec` names everything a batched Monte-Carlo run needs:
+how many trials to draw, the PRNG seed, optional overrides of the
+device technology's non-ideality knobs (programming variation, finite
+conductance levels, read noise), stuck-at fault-injection rates, and the
+accuracy threshold the yield metric is computed against.
+
+The spec is a frozen, hashable dataclass so it can ride on
+`IMACConfig.variability`, be swept as a `SweepSpec` axis, and be
+fingerprinted by the on-disk result cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.devices import DeviceTech
+
+
+@dataclasses.dataclass(frozen=True)
+class VariabilitySpec:
+    """One Monte-Carlo reliability analysis.
+
+    Attributes:
+      trials: number of independent variation trials T.
+      seed: PRNG seed the T trial keys are split from (ignored when
+        explicit per-trial keys are passed to the engine).
+      sigma_rel: override of the technology's lognormal programming
+        variation (None = use the tech's own `sigma_rel`).
+      levels: override of the technology's programmable conductance
+        levels (None = use the tech's own `levels`).
+      read_noise_rel: override of the technology's per-access Gaussian
+        read-current noise (None = use the tech's own).
+      p_stuck_on: per-device probability of a stuck-at-G_on fault.
+      p_stuck_off: per-device probability of a stuck-at-G_off fault.
+      acc_threshold: accuracy bar for the yield metric
+        P(accuracy >= acc_threshold).
+    """
+
+    trials: int = 8
+    seed: int = 0
+    sigma_rel: Optional[float] = None
+    levels: Optional[int] = None
+    read_noise_rel: Optional[float] = None
+    p_stuck_on: float = 0.0
+    p_stuck_off: float = 0.0
+    acc_threshold: float = 0.9
+
+    def __post_init__(self):
+        if self.trials < 1:
+            raise ValueError(f"need at least one trial, got {self.trials}")
+        for name in ("p_stuck_on", "p_stuck_off"):
+            p = getattr(self, name)
+            if not (0.0 <= p <= 1.0):
+                raise ValueError(f"{name} must be a probability, got {p}")
+        if self.p_stuck_on + self.p_stuck_off > 1.0:
+            raise ValueError(
+                "p_stuck_on + p_stuck_off must be <= 1, got "
+                f"{self.p_stuck_on} + {self.p_stuck_off}"
+            )
+
+    @property
+    def has_faults(self) -> bool:
+        return self.p_stuck_on > 0.0 or self.p_stuck_off > 0.0
+
+    def is_deterministic_for(self, tech: DeviceTech) -> bool:
+        """True when trials of this spec on `tech` carry no stochastic
+        content (no programming variation, no read noise, no faults) —
+        all T trials are then bitwise identical and one solve suffices."""
+        resolved = self.resolve_tech(tech)
+        return (
+            resolved.sigma_rel <= 0.0
+            and resolved.read_noise_rel <= 0.0
+            and not self.has_faults
+        )
+
+    def resolve_tech(self, tech: DeviceTech) -> DeviceTech:
+        """Apply the spec's non-ideality overrides to a technology."""
+        overrides = {}
+        if self.sigma_rel is not None:
+            overrides["sigma_rel"] = self.sigma_rel
+        if self.levels is not None:
+            overrides["levels"] = self.levels
+        if self.read_noise_rel is not None:
+            overrides["read_noise_rel"] = self.read_noise_rel
+        return dataclasses.replace(tech, **overrides) if overrides else tech

@@ -1,9 +1,11 @@
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.devices import (
-    CBRAM, MRAM, PCM, RRAM, custom_tech, get_tech,
+    CBRAM, MRAM, PCM, RRAM, apply_stuck_faults, custom_tech, get_tech,
+    sample_stuck_faults,
 )
 
 
@@ -43,6 +45,79 @@ def test_perturb_bounds():
     assert float(p.min()) >= tech.g_off * (1 - tol)
     assert float(p.max()) <= tech.g_on * (1 + tol)
     assert not jnp.allclose(p, g)
+
+
+def test_quantize_levels_zero_and_one_are_clip_only():
+    """levels=0 (continuous) and levels=1 (degenerate) both pass values
+    through untouched apart from range clipping."""
+    g_in = jnp.linspace(0.5 * MRAM.g_off, 2.0 * MRAM.g_on, 33)
+    for levels in (0, 1):
+        tech = custom_tech(MRAM.r_low, MRAM.r_high, levels=levels)
+        q = tech.quantize(g_in)
+        expect = jnp.clip(g_in, tech.g_off, tech.g_on)
+        assert jnp.array_equal(q, expect)
+
+
+def test_quantize_clips_out_of_range():
+    tech = custom_tech(1e3, 1e6, levels=4)
+    q = tech.quantize(jnp.asarray([0.0, -1.0, 2 * tech.g_on]))
+    assert float(q[0]) == pytest.approx(tech.g_off)
+    assert float(q[1]) == pytest.approx(tech.g_off)
+    assert float(q[2]) == pytest.approx(tech.g_on)
+
+
+def test_quantize_monotone_and_idempotent():
+    tech = custom_tech(1e3, 1e6, levels=5)
+    g = jnp.linspace(0.5 * tech.g_off, 1.5 * tech.g_on, 201)
+    q = tech.quantize(g)
+    assert bool(jnp.all(jnp.diff(q) >= 0))  # monotone in the input
+    assert jnp.array_equal(tech.quantize(q), q)  # idempotent
+
+
+def test_perturb_trials_matches_sequential_bitwise():
+    """The vectorized trial sampler must equal a per-key perturb loop
+    exactly — the batched Monte-Carlo engine's equivalence rests on it."""
+    tech = custom_tech(1e3, 1e5, sigma_rel=0.3)
+    g = jnp.linspace(tech.g_off, tech.g_on, 24).reshape(6, 4)
+    keys = jax.random.split(jax.random.PRNGKey(5), 4)
+    batched = tech.perturb_trials(keys, g)
+    seq = jnp.stack([tech.perturb(k, g) for k in keys])
+    assert jnp.array_equal(batched, seq)
+
+
+def test_perturb_trials_sigma_zero_is_exact():
+    tech = custom_tech(1e3, 1e5, sigma_rel=0.0)
+    g = jnp.linspace(tech.g_off, tech.g_on, 8)
+    out = tech.perturb_trials(jax.random.split(jax.random.PRNGKey(0), 3), g)
+    assert out.shape == (3, 8)
+    assert jnp.array_equal(out, jnp.broadcast_to(g, (3, 8)))
+
+
+def test_stuck_fault_masks_disjoint_and_rates():
+    key = jax.random.PRNGKey(0)
+    on, off = sample_stuck_faults(key, (40000,), 0.1, 0.2)
+    assert not bool(jnp.any(jnp.logical_and(on, off)))  # disjoint
+    assert float(jnp.mean(on)) == pytest.approx(0.1, abs=0.01)
+    assert float(jnp.mean(off)) == pytest.approx(0.2, abs=0.01)
+    # Same key -> same masks.
+    on2, off2 = sample_stuck_faults(key, (40000,), 0.1, 0.2)
+    assert jnp.array_equal(on, on2) and jnp.array_equal(off, off2)
+
+
+def test_stuck_fault_validation():
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="probabilit"):
+        sample_stuck_faults(key, (4,), -0.1, 0.0)
+    with pytest.raises(ValueError, match="<= 1"):
+        sample_stuck_faults(key, (4,), 0.7, 0.7)
+
+
+def test_apply_stuck_faults_values():
+    g = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    on = jnp.asarray([True, False, False, False])
+    off = jnp.asarray([False, True, False, False])
+    out = apply_stuck_faults(g, on, off, g_on=9.0, g_off=0.5)
+    np.testing.assert_allclose(np.asarray(out), [9.0, 0.5, 3.0, 4.0])
 
 
 def test_get_tech():

@@ -1,0 +1,72 @@
+"""Property tests for device quantization and variability sampling.
+
+Separate from test_devices.py so its deterministic tests keep running
+in environments without hypothesis (importorskip guards this module).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.devices import custom_tech
+
+
+techs = st.builds(
+    lambda r_low, ratio, levels: custom_tech(
+        r_low, r_low * ratio, levels=levels
+    ),
+    r_low=st.floats(min_value=1e3, max_value=1e5),
+    ratio=st.floats(min_value=1.5, max_value=200.0),
+    levels=st.integers(min_value=0, max_value=16),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(tech=techs, seed=st.integers(min_value=0, max_value=2**16))
+def test_quantize_range_levels_monotone_idempotent(tech, seed):
+    g = jax.random.uniform(
+        jax.random.PRNGKey(seed), (64,),
+        minval=0.0, maxval=2.0 * tech.g_on,
+    )
+    q = tech.quantize(g)
+    # Always inside the programmable range (float32 grid vs float64
+    # bounds -> relative tolerance).
+    assert float(q.min()) >= tech.g_off * (1 - 1e-6)
+    assert float(q.max()) <= tech.g_on * (1 + 1e-6)
+    # Level count bound (continuous/degenerate levels impose none).
+    if tech.levels > 1:
+        assert int(jnp.unique(q).shape[0]) <= tech.levels
+    else:
+        assert jnp.array_equal(q, jnp.clip(g, tech.g_off, tech.g_on))
+    # Monotone in the input and idempotent.
+    order = jnp.argsort(g)
+    assert bool(jnp.all(jnp.diff(q[order]) >= -1e-18))
+    assert jnp.array_equal(tech.quantize(q), q)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sigma=st.floats(min_value=0.0, max_value=0.8),
+    seed=st.integers(min_value=0, max_value=2**16),
+    trials=st.integers(min_value=1, max_value=6),
+)
+def test_variability_sampling_properties(sigma, seed, trials):
+    tech = custom_tech(1e3, 1e5, sigma_rel=sigma)
+    g = jnp.linspace(tech.g_off, tech.g_on, 32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    a = tech.perturb_trials(keys, g)
+    assert a.shape == (trials, 32)
+    # Same PRNG keys -> bitwise-identical trials.
+    b = tech.perturb_trials(keys, g)
+    assert jnp.array_equal(a, b)
+    # Batched == sequential per-key perturb, bitwise.
+    seq = jnp.stack([tech.perturb(k, g) for k in keys])
+    assert jnp.array_equal(a, seq)
+    # Physical range always respected.
+    assert float(a.min()) >= tech.g_off * (1 - 1e-6)
+    assert float(a.max()) <= tech.g_on * (1 + 1e-6)
+    if sigma == 0.0:
+        # sigma_rel=0 is exact, not merely close.
+        assert jnp.array_equal(a, jnp.broadcast_to(g, (trials, 32)))

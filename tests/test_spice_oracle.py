@@ -1,0 +1,106 @@
+"""SPICE-oracle differential test.
+
+The generated SPICE netlist is IMAC-Sim's defining artifact; the fast
+Gauss–Seidel tridiagonal solver is ours. This property test closes the
+loop: for small random crossbars the netlist emitted by core.netlist is
+parsed back into conductance matrices, the full dense MNA system is
+assembled and solved (the oracle), and the production solver must agree
+on node voltages and TIA currents to tight tolerance across random
+`CircuitParams` draws — wire, source and TIA resistances included.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.devices import CBRAM, MRAM, PCM, RRAM
+from repro.core.imac import IMACConfig, build_plans
+from repro.core.interconnect import Interconnect
+from repro.core.mapping import map_network
+from repro.core.netlist import map_layer, parse_tile_conductances
+from repro.core.solver import CircuitParams, solve_crossbar, solve_dense_mna
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    fan_in=st.integers(min_value=2, max_value=6),
+    fan_out=st.integers(min_value=1, max_value=4),
+    array_size=st.integers(min_value=3, max_value=5),
+    tech=st.sampled_from([MRAM, RRAM, CBRAM, PCM]),
+    wire_scale=st.floats(min_value=0.1, max_value=5.0),
+    r_source=st.floats(min_value=20.0, max_value=300.0),
+    r_tia=st.floats(min_value=1.0, max_value=30.0),
+)
+def test_netlist_mna_matches_gauss_seidel(
+    seed, fan_in, fan_out, array_size, tech, wire_scale, r_source, r_tia
+):
+    key = jax.random.PRNGKey(seed)
+    kw, kb, kv = jax.random.split(key, 3)
+    params = [
+        (
+            jax.random.normal(kw, (fan_in, fan_out)),
+            0.1 * jax.random.normal(kb, (fan_out,)),
+        )
+    ]
+    # Scale the wire resistivity so r_segment spans ~1.4..69 ohm.
+    interconnect = dataclasses.replace(
+        Interconnect(), resistivity=1.9e-8 * wire_scale
+    )
+    cfg = IMACConfig(
+        tech=tech,
+        interconnect=interconnect,
+        array_rows=array_size,
+        array_cols=array_size,
+        r_source=r_source,
+        r_tia=r_tia,
+    )
+    mapped = map_network(params, tech, v_unit=cfg.vdd)
+    plans = build_plans([fan_in, fan_out], cfg)
+    plan = plans[0]
+
+    # Netlist -> conductances: the netlist is the source of truth both
+    # solvers consume (includes the 6-sig-digit resistor rounding).
+    text = map_layer(0, mapped[0], plan, cfg)
+    gp, gn = parse_tile_conductances(text, plan)
+
+    r_seg = interconnect.r_segment
+    cp = CircuitParams(
+        r_row=r_seg,
+        r_col=r_seg,
+        r_source=r_source,
+        r_tia=r_tia,
+        gs_iters=400,
+        omega=1.8,
+        tol=1e-9,
+    )
+    v = jax.random.uniform(kv, (plan.rows,), minval=0.0, maxval=cfg.vdd)
+
+    for tile in range(plan.n_tiles):
+        for g_tile in (gp[tile], gn[tile]):
+            g = jnp.asarray(g_tile)
+            oracle = solve_dense_mna(g, v, cp)
+            fast = solve_crossbar(g, v, cp)
+            np.testing.assert_allclose(
+                np.asarray(fast.i_out),
+                np.asarray(oracle.i_out),
+                rtol=1e-3,
+                atol=1e-9,
+            )
+            np.testing.assert_allclose(
+                np.asarray(fast.vr),
+                np.asarray(oracle.vr),
+                rtol=5e-3,
+                atol=1e-6,
+            )
+            np.testing.assert_allclose(
+                np.asarray(fast.vc),
+                np.asarray(oracle.vc),
+                rtol=5e-3,
+                atol=1e-6,
+            )

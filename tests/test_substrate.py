@@ -225,6 +225,26 @@ def test_no_axis_reuse_in_one_spec():
     assert len(taken) == 1
 
 
+# ----------------------------------------------------- interconnect pin
+
+
+def test_interconnect_r_segment_is_13_8_ohm():
+    """Pin the resistivity-typo correction. The paper prints
+    rho = 1.9e9 ohm.m (an exponent typo); we use the copper-like BEOL
+    value 1.9e-8 ohm.m, which with Table II's printed geometry gives
+    ~13.8 ohm per bitcell segment. If this drifts, someone 'fixed' the
+    resistivity back to the paper's literal value — see the
+    core/interconnect.py module docstring."""
+    from repro.core.interconnect import DEFAULT_INTERCONNECT, Interconnect
+
+    assert DEFAULT_INTERCONNECT.resistivity == pytest.approx(1.9e-8)
+    assert DEFAULT_INTERCONNECT.r_segment == pytest.approx(13.8, rel=0.01)
+    # The paper's literal rho would give a ~1e17-ohm segment — the typo
+    # is unambiguous.
+    literal = dataclasses.replace(Interconnect(), resistivity=1.9e9)
+    assert literal.r_segment > 1e15
+
+
 # --------------------------------------------------- trainer integration
 
 

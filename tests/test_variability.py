@@ -1,0 +1,394 @@
+"""repro.variability: batched Monte-Carlo reliability engine.
+
+The load-bearing regression is loop-equivalence: the batched engine must
+reproduce the seed per-trial loop's accuracies bitwise for identical
+per-trial keys (examples/monte_carlo.py's port and
+benchmarks/variability_bench.py both rest on it).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IMACConfig
+from repro.core.devices import custom_tech, get_tech
+from repro.core.evaluate import test_imac as imac_eval  # alias: pytest must not collect it
+from repro.explore import (
+    RELIABILITY_OBJECTIVES,
+    ResultCache,
+    SweepSpec,
+    pareto_front,
+    run_sweep,
+)
+from repro.variability import (
+    ReliabilityReport,
+    VariabilitySpec,
+    run_variability,
+    trial_keys,
+)
+
+
+# ------------------------------------------------------------------ spec
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="at least one trial"):
+        VariabilitySpec(trials=0)
+    with pytest.raises(ValueError, match="probability"):
+        VariabilitySpec(p_stuck_on=1.5)
+    with pytest.raises(ValueError, match="<= 1"):
+        VariabilitySpec(p_stuck_on=0.6, p_stuck_off=0.6)
+
+
+def test_spec_resolves_tech_overrides():
+    spec = VariabilitySpec(sigma_rel=0.2, levels=8, read_noise_rel=0.01)
+    tech = spec.resolve_tech(get_tech("MRAM"))
+    assert tech.sigma_rel == 0.2
+    assert tech.levels == 8
+    assert tech.read_noise_rel == 0.01
+    # No overrides -> the tech passes through unchanged.
+    assert VariabilitySpec().resolve_tech(get_tech("MRAM")) is get_tech("MRAM")
+
+
+# ------------------------------------- regression: batched == seed loop
+
+
+def test_batched_matches_per_trial_loop(trained_tiny_mlp):
+    """Pin examples/monte_carlo.py's accuracy distribution across the
+    port: for identical per-trial keys, the batched engine reproduces
+    the per-trial test_imac loop bitwise."""
+    params, xte, yte = trained_tiny_mlp
+    tech = dataclasses.replace(get_tech("PCM"), sigma_rel=0.25)
+    cfg = IMACConfig(tech=tech, array_rows=32, array_cols=32)
+    n_trials = 4
+    keys = jnp.stack([jax.random.PRNGKey(100 + t) for t in range(n_trials)])
+
+    loop = [
+        imac_eval(
+            params, xte, yte, cfg,
+            n_samples=16, chunk=16, variation_key=keys[t],
+        )
+        for t in range(n_trials)
+    ]
+    report = run_variability(
+        params, xte, yte, cfg, VariabilitySpec(trials=n_trials),
+        keys=keys, n_samples=16, chunk=16,
+    )
+    assert list(report.per_trial_accuracy) == [r.accuracy for r in loop]
+    np.testing.assert_allclose(
+        report.per_trial_power, [r.avg_power for r in loop], rtol=1e-6
+    )
+    assert report.latency == pytest.approx(loop[0].latency, rel=1e-6)
+    assert report.acc_mean == pytest.approx(
+        np.mean([r.accuracy for r in loop]), abs=1e-12
+    )
+
+
+def test_sigma_zero_trials_are_exact(trained_tiny_mlp):
+    """sigma_rel=0, no faults: every trial equals the deterministic
+    evaluation exactly."""
+    params, xte, yte = trained_tiny_mlp
+    cfg = IMACConfig(tech="MRAM", array_rows=32, array_cols=32)
+    det = imac_eval(params, xte, yte, cfg, n_samples=16, chunk=16)
+    report = run_variability(
+        params, xte, yte, cfg, VariabilitySpec(trials=3, sigma_rel=0.0),
+        n_samples=16, chunk=16,
+    )
+    assert report.per_trial_accuracy == (det.accuracy,) * 3
+    assert report.acc_std == 0.0
+    np.testing.assert_allclose(
+        report.per_trial_power, [det.avg_power] * 3, rtol=1e-6
+    )
+
+
+def test_same_seed_is_reproducible(trained_tiny_mlp):
+    params, xte, yte = trained_tiny_mlp
+    cfg = IMACConfig(tech="PCM", parasitics=False)
+    spec = VariabilitySpec(trials=4, seed=11, sigma_rel=0.3)
+    a = run_variability(params, xte, yte, cfg, spec, n_samples=32, chunk=32)
+    b = run_variability(params, xte, yte, cfg, spec, n_samples=32, chunk=32)
+    assert a == b
+    c = run_variability(
+        params, xte, yte, cfg, dataclasses.replace(spec, seed=12),
+        n_samples=32, chunk=32,
+    )
+    assert c.per_trial_accuracy != a.per_trial_accuracy or (
+        c.per_trial_power != a.per_trial_power
+    )
+
+
+# ------------------------------------------------------ fault injection
+
+
+def test_stuck_off_faults_collapse_accuracy(trained_tiny_mlp):
+    """p_stuck_off=1: every device reads G_off, the differential currents
+    vanish and accuracy collapses to ~chance."""
+    params, xte, yte = trained_tiny_mlp
+    cfg = IMACConfig(tech="MRAM", parasitics=False)
+    healthy = run_variability(
+        params, xte, yte, cfg, VariabilitySpec(trials=2),
+        n_samples=32, chunk=32,
+    )
+    dead = run_variability(
+        params, xte, yte, cfg, VariabilitySpec(trials=2, p_stuck_off=1.0),
+        n_samples=32, chunk=32,
+    )
+    assert healthy.acc_mean > 0.9
+    assert dead.acc_mean < 0.5
+    assert dead.yield_frac == 0.0
+
+
+def test_moderate_fault_rate_degrades_yield(trained_tiny_mlp):
+    params, xte, yte = trained_tiny_mlp
+    cfg = IMACConfig(tech="MRAM", parasitics=False)
+    spec = VariabilitySpec(
+        trials=6, sigma_rel=0.1, p_stuck_on=0.02, p_stuck_off=0.02,
+        acc_threshold=0.95,
+    )
+    rep = run_variability(params, xte, yte, cfg, spec, n_samples=32, chunk=32)
+    assert 0.0 <= rep.yield_frac <= 1.0
+    assert rep.acc_min <= rep.acc_q05 <= rep.acc_q50 <= rep.acc_q95 <= rep.acc_max
+    # Faults make trials differ from the fault-free run.
+    clean = run_variability(
+        params, xte, yte, cfg,
+        dataclasses.replace(spec, p_stuck_on=0.0, p_stuck_off=0.0),
+        n_samples=32, chunk=32,
+    )
+    assert rep.per_trial_accuracy != clean.per_trial_accuracy or (
+        rep.per_trial_power != clean.per_trial_power
+    )
+
+
+# ----------------------------------------------------------- read noise
+
+
+def test_per_trial_read_noise_decorrelates_trials(trained_tiny_mlp):
+    """With read noise on and sigma off, stacked trials still differ
+    (noise_per_config draws independently per trial) but are
+    reproducible for the same seed."""
+    params, xte, yte = trained_tiny_mlp
+    cfg = IMACConfig(
+        tech=custom_tech(8.5e3, 25.5e3, name="NOISY", read_noise_rel=0.2),
+        parasitics=False,
+    )
+    spec = VariabilitySpec(trials=3, sigma_rel=0.0)
+    rep = run_variability(params, xte, yte, cfg, spec, n_samples=64, chunk=64)
+    powers = rep.per_trial_power
+    accs = rep.per_trial_accuracy
+    assert len(set(accs)) > 1 or len(set(powers)) > 1
+    rep2 = run_variability(params, xte, yte, cfg, spec, n_samples=64, chunk=64)
+    assert rep == rep2
+
+
+# ------------------------------------------------- explore integration
+
+
+def test_sweep_spec_reliability_axes():
+    spec = SweepSpec.grid(
+        IMACConfig(), tech=["MRAM", "PCM"], sigma_rel=[0.1, 0.2], trials=[4]
+    )
+    points = spec.materialize()
+    assert len(points) == 4
+    for name, cfg in points:
+        assert cfg.variability.trials == 4
+        assert cfg.variability.sigma_rel in (0.1, 0.2)
+    assert points[0][0] == "tech=MRAM,sigma_rel=0.1,trials=4"
+
+
+def test_sweep_spec_fault_rate_axis():
+    spec = SweepSpec.grid(IMACConfig(), fault_rate=[0.0, 0.01])
+    (_, a), (_, b) = spec.materialize()
+    assert a.variability.p_stuck_on == 0.0
+    assert b.variability.p_stuck_on == pytest.approx(0.005)
+    assert b.variability.p_stuck_off == pytest.approx(0.005)
+
+
+def test_run_sweep_reliability_points_and_pareto(trained_tiny_mlp, tmp_path):
+    """SweepSpec sigma axis through run_sweep: cached, Pareto-extractable
+    ReliabilityReports."""
+    params, xte, yte = trained_tiny_mlp
+    spec = SweepSpec.grid(
+        IMACConfig(parasitics=False),
+        tech=["MRAM", "PCM"],
+        sigma_rel=[0.1, 0.3],
+        fault_rate=[0.0, 0.01],
+        trials=[3],
+    )
+    cache = ResultCache(str(tmp_path / "rel"))
+    res = run_sweep(params, xte, yte, spec, n_samples=32, chunk=32, cache=cache)
+    assert len(res) == 8
+    for r in res:
+        assert isinstance(r.result, ReliabilityReport)
+        assert r.result.n_trials == 3
+        assert r.acc_q05 <= r.acc_mean <= r.acc_q95 or r.acc_std == 0.0
+    # The fault axis must change results for at least one (tech, sigma).
+    by_name = {r.name: r.result for r in res}
+    assert any(
+        by_name[n].per_trial_accuracy
+        != by_name[n.replace("fault_rate=0.01", "fault_rate=0")].per_trial_accuracy
+        or by_name[n].per_trial_power
+        != by_name[n.replace("fault_rate=0.01", "fault_rate=0")].per_trial_power
+        for n in by_name if "fault_rate=0.01" in n
+    )
+
+    front = pareto_front(res, RELIABILITY_OBJECTIVES)
+    assert front  # non-empty, indices valid
+    assert all(0 <= i < len(res) for i in front)
+
+    # Warm re-run: all hits, bit-identical reports via the JSON round-trip.
+    warm = run_sweep(
+        params, xte, yte, spec, n_samples=32, chunk=32, cache=cache
+    )
+    assert all(r.cached for r in warm)
+    for a, b in zip(res, warm):
+        assert a.result == b.result
+
+
+def test_run_sweep_read_noise_axis_matches_run_variability(trained_tiny_mlp):
+    """A read_noise_rel sweep axis must actually inject noise: points
+    with different values differ, and each equals the direct
+    run_variability evaluation (spec-seeded noise, position-independent)."""
+    params, xte, yte = trained_tiny_mlp
+    base = IMACConfig(parasitics=False)
+    spec = SweepSpec.grid(
+        base, read_noise_rel=[0.0, 0.3], trials=[3], sigma_rel=[0.0]
+    )
+    res = run_sweep(params, xte, yte, spec, n_samples=64, chunk=64)
+    quiet, noisy = res[0].result, res[1].result
+    assert quiet.per_trial_accuracy != noisy.per_trial_accuracy or (
+        quiet.per_trial_power != noisy.per_trial_power
+    )
+    # Noisy trials decorrelate (independent per-trial draws).
+    assert len(set(noisy.per_trial_accuracy)) > 1 or (
+        len(set(noisy.per_trial_power)) > 1
+    )
+    direct = run_variability(
+        params, xte, yte, res[1].config, res[1].config.variability,
+        n_samples=64, chunk=64,
+    )
+    assert noisy == direct
+
+
+def test_deterministic_result_is_single_trial_distribution(trained_tiny_mlp):
+    """IMACResult proxies the reliability fields as a degenerate T=1
+    distribution so mixed sweeps share Pareto objectives."""
+    params, xte, yte = trained_tiny_mlp
+    res = imac_eval(
+        params, xte, yte, IMACConfig(tech="PCM", parasitics=False),
+        n_samples=16, chunk=16,
+    )
+    assert res.n_trials == 1
+    assert res.acc_q05 == res.acc_q95 == res.acc_mean == res.accuracy
+    assert res.acc_std == 0.0
+    assert res.power_worst == res.power_mean == res.avg_power
+
+
+def test_mixed_sweep_pareto_with_reliability_objectives(trained_tiny_mlp):
+    """pareto_front(RELIABILITY_OBJECTIVES) must work on a sweep mixing
+    deterministic and Monte-Carlo points."""
+    params, xte, yte = trained_tiny_mlp
+    plain = IMACConfig(tech="MRAM", parasitics=False)
+    mc = dataclasses.replace(
+        IMACConfig(tech="PCM", parasitics=False),
+        variability=VariabilitySpec(trials=3, sigma_rel=0.2),
+    )
+    res = run_sweep(
+        params, xte, yte, [("plain", plain), ("mc", mc)],
+        n_samples=32, chunk=32,
+    )
+    front = pareto_front(res, RELIABILITY_OBJECTIVES)
+    assert front and all(0 <= i < len(res) for i in front)
+
+
+def test_run_sweep_mixes_plain_and_reliability_points(trained_tiny_mlp):
+    """A deterministic point and a Monte-Carlo point of the same traced
+    structure share one batched solve; the plain point's result matches
+    its solo evaluation."""
+    params, xte, yte = trained_tiny_mlp
+    plain = IMACConfig(tech="MRAM", parasitics=False)
+    mc = dataclasses.replace(
+        plain, variability=VariabilitySpec(trials=3, sigma_rel=0.2)
+    )
+    res = run_sweep(
+        params, xte, yte, [("plain", plain), ("mc", mc)],
+        n_samples=32, chunk=32,
+    )
+    solo = imac_eval(params, xte, yte, plain, n_samples=32, chunk=32)
+    assert res[0].result.accuracy == pytest.approx(solo.accuracy, abs=1e-12)
+    assert isinstance(res[1].result, ReliabilityReport)
+    assert res[1].result.n_trials == 3
+
+
+def test_deterministic_spec_collapses_to_one_solve(
+    trained_tiny_mlp, monkeypatch
+):
+    """A spec with no stochastic content solves once and replicates —
+    not T identical circuit evaluations."""
+    import repro.variability.engine as vengine
+
+    params, xte, yte = trained_tiny_mlp
+    stacked_sizes = []
+    orig = vengine.evaluate_batch
+
+    def spy(params_, x_, y_, cfgs_, **kw):
+        stacked_sizes.append(len(cfgs_))
+        return orig(params_, x_, y_, cfgs_, **kw)
+
+    monkeypatch.setattr(vengine, "evaluate_batch", spy)
+    rep = run_variability(
+        params, xte, yte, IMACConfig(tech="MRAM", parasitics=False),
+        VariabilitySpec(trials=5, sigma_rel=0.0),
+        n_samples=16, chunk=16,
+    )
+    assert stacked_sizes == [1]
+    assert rep.n_trials == 5
+    assert len(set(rep.per_trial_accuracy)) == 1
+
+
+def test_mc_cache_keys_ignore_sweep_level_keys(trained_tiny_mlp, tmp_path):
+    """Reliability results derive only from their spec's seed, so adding
+    a sweep-level variation_key must not invalidate their cache entries
+    (while deterministic points' entries do miss)."""
+    params, xte, yte = trained_tiny_mlp
+    plain = IMACConfig(tech="MRAM", parasitics=False)
+    mc = dataclasses.replace(
+        plain, variability=VariabilitySpec(trials=3, sigma_rel=0.2)
+    )
+    points = [("plain", plain), ("mc", mc)]
+    cache = ResultCache(str(tmp_path / "mc"))
+    cold = run_sweep(params, xte, yte, points, n_samples=16, chunk=16,
+                     cache=cache)
+    warm = run_sweep(
+        params, xte, yte, points, n_samples=16, chunk=16, cache=cache,
+        variation_key=jax.random.PRNGKey(0),
+    )
+    assert not warm[0].cached    # paired draw changes the plain point
+    assert warm[1].cached        # MC point untouched by variation_key
+    assert warm[1].result == cold[1].result
+
+
+def test_trial_keys_match_spec():
+    spec = VariabilitySpec(trials=5, seed=3)
+    keys = trial_keys(spec)
+    assert keys.shape[0] == 5
+    np.testing.assert_array_equal(
+        np.asarray(keys),
+        np.asarray(jax.random.split(jax.random.PRNGKey(3), 5)),
+    )
+
+
+def test_report_proxies_point_attributes():
+    rep_fields = dict(
+        n_trials=2, acc_mean=0.9, acc_std=0.01, acc_min=0.89, acc_max=0.91,
+        acc_q05=0.89, acc_q25=0.9, acc_q50=0.9, acc_q75=0.91, acc_q95=0.91,
+        acc_threshold=0.85, yield_frac=1.0, power_mean=0.1, power_worst=0.12,
+        latency=1e-7, digital_accuracy=0.95, worst_residual=1e-6,
+        n_samples=32, per_trial_accuracy=(0.89, 0.91),
+        per_trial_power=(0.1, 0.12), hp=(1,), vp=(1,),
+    )
+    rep = ReliabilityReport(**rep_fields)
+    assert rep.accuracy == rep.acc_mean
+    assert rep.avg_power == rep.power_mean
+    assert rep.error_rate == pytest.approx(1.0 - rep.acc_mean)
