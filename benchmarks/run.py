@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   table4      — paper Table IV (device technologies)
   sweep       — batched exploration engine vs per-config loop (Table III x IV)
   variability — batched Monte-Carlo reliability engine vs per-trial loop
+  transient   — batched transient co-simulation vs per-config loop + the
+                analytic-vs-waveform settling crossvalidation
   solver      — crossbar circuit-solver scaling (the adapted SPICE engine)
   kernels     — Pallas kernel workloads (ref-path timings on CPU)
   deploy      — IMAC deployment planning for the 10 assigned archs
@@ -33,6 +35,7 @@ def main() -> None:
         sweep_bench,
         table3_partitioning,
         table4_device_tech,
+        transient_bench,
         variability_bench,
     )
 
@@ -41,6 +44,7 @@ def main() -> None:
         "table4": table4_device_tech.run,
         "sweep": sweep_bench.run,
         "variability": variability_bench.run,
+        "transient": transient_bench.run,
         "solver": solver_scaling.run,
         "kernels": kernels_bench.run,
         "deploy": deploy_report.run,

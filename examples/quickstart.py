@@ -3,8 +3,10 @@
 Trains the 400x120x84x10 sigmoid MLP (the paper's MNIST workload, on the
 offline synthetic digit set), deploys it on an IMAC architecture with
 MRAM 32x32 subarrays (auto H_P/V_P — reproduces Table III's [13,4,3] /
-[4,3,1]), runs the batched circuit simulation, and writes the generated
-SPICE netlist files.
+[4,3,1]), runs the batched circuit simulation, writes the generated
+SPICE netlist files, and cross-validates the analytic Elmore latency
+against the waveform-measured settling of the transient co-simulation
+engine (repro.transient).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,6 +19,7 @@ from repro.core import IMACConfig, IMACNetwork, map_imac, netlist_stats
 from repro.core.digital import accuracy, train_mlp
 from repro.core.evaluate import test_imac
 from repro.data.digits import train_test_split
+from repro.transient import TransientSpec, crossvalidate_settling
 
 
 def main():
@@ -44,6 +47,20 @@ def main():
             f.write(text)
     print(f"wrote {sorted(files)} to {outdir}/")
     print("element counts:", netlist_stats(files))
+
+    print("\n== 4. transient co-simulation: analytic vs waveform latency ==")
+    # One stacked integration over increasing wire capacitance; the
+    # measured settling must track the analytic RC ordering.
+    spec = TransientSpec(t_stop=20e-9, n_steps=24, gs_iters=4, n_probe=1)
+    recs = crossvalidate_settling(
+        params, xte, cfg, cap_scales=(1.0, 1000.0, 3000.0), spec=spec
+    )
+    print(f"{'cap scale':>10} {'c_seg (F)':>12} {'analytic (ns)':>14} "
+          f"{'waveform (ns)':>14} {'energy (nJ)':>12}")
+    for r in recs:
+        print(f"{r['scale']:>10g} {r['c_segment']:>12.3g} "
+              f"{r['analytic'] * 1e9:>14.2f} {r['measured'] * 1e9:>14.2f} "
+              f"{r['energy'] * 1e9:>12.3f}")
 
 
 if __name__ == "__main__":

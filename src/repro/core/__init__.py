@@ -28,10 +28,21 @@ from repro.core.evaluate import (
     sweep,
     test_imac,
 )
-from repro.core.imac import IMACConfig, IMACNetwork, imac_linear, linear_forward
+from repro.core.imac import (
+    IMACConfig,
+    IMACNetwork,
+    TransientStats,
+    imac_linear,
+    linear_forward,
+)
 from repro.core.interconnect import DEFAULT_INTERCONNECT, Interconnect
 from repro.core.mapping import MappedLayer, map_network, map_wb
-from repro.core.netlist import map_imac, map_layer, netlist_stats
+from repro.core.netlist import (
+    map_imac,
+    map_layer,
+    netlist_stats,
+    parse_transient_directives,
+)
 from repro.core.neurons import NeuronModel, get_neuron
 from repro.core.partition import PartitionPlan, auto_partition, plan_partition
 from repro.core.solver import (
@@ -71,7 +82,9 @@ __all__ = [
     "map_network",
     "map_wb",
     "netlist_stats",
+    "parse_transient_directives",
     "plan_partition",
+    "TransientStats",
     "solve_crossbar",
     "solve_dense_mna",
     "solve_ideal",

@@ -31,13 +31,24 @@ class IMACResult(NamedTuple):
     accuracy: float
     error_rate: float
     avg_power: float          # W, averaged over samples (paper's P_average)
-    latency: float            # s, settling + sampling estimate
+    latency: float            # s, settling + sampling (waveform-measured
+                              # when cfg.transient is set, else analytic)
     digital_accuracy: float   # reference accuracy of the float model
     per_layer_power: tuple    # W per layer (batch mean)
     worst_residual: float     # solver convergence check
     n_samples: int
     hp: tuple
     vp: tuple
+    # Energy per inference (J). Waveform-integrated over the transient
+    # horizon when cfg.transient is set; otherwise the avg_power x
+    # latency estimate, so energy-aware Pareto objectives
+    # (explore.pareto.TRANSIENT_OBJECTIVES) work on mixed sweeps.
+    energy: float = 0.0
+    # The input-independent Elmore estimate, always reported — the
+    # crossvalidation path compares it against the measured latency.
+    latency_analytic: float = 0.0
+    latency_source: str = "analytic"   # 'analytic' | 'transient'
+    settled: bool = True               # waveform in band at the horizon
 
     # Degenerate-distribution aliases: a deterministic evaluation is a
     # single-trial Monte-Carlo run (every accuracy quantile collapses to
@@ -117,6 +128,10 @@ def structure_key(topology: Sequence[int], cfg: IMACConfig) -> tuple:
         float(cfg.gs_tol),
         cfg.resolved_neuron(),
         jnp.dtype(cfg.dtype).name,
+        # The transient spec shapes the traced scan (step count, method,
+        # GS budget, horizon...), so configurations only batch together
+        # when they request the same one (or none).
+        cfg.transient,
     )
 
 
@@ -160,6 +175,31 @@ def concat_mapped(
     ]
 
 
+def stack_mapped(
+    mapped_all: "Sequence[Sequence[MappedLayer]]", dtype
+) -> "tuple[tuple, tuple, tuple]":
+    """Stack per-config mapWB outputs along a leading config axis.
+
+    Returns per-layer tuples (g_pos, g_neg, k): (C, fan_in+1, fan_out)
+    conductances and (C,) sense scales — the stacked form both
+    `evaluate_batch` and the transient engine consume.
+    """
+    n_layers = len(mapped_all[0])
+    g_pos = tuple(
+        jnp.stack([m[layer].g_pos for m in mapped_all])
+        for layer in range(n_layers)
+    )
+    g_neg = tuple(
+        jnp.stack([m[layer].g_neg for m in mapped_all])
+        for layer in range(n_layers)
+    )
+    k = tuple(
+        jnp.asarray([m[layer].k for m in mapped_all], dtype)
+        for layer in range(n_layers)
+    )
+    return g_pos, g_neg, k
+
+
 def evaluate_batch(
     params: Params,
     x: jax.Array,
@@ -183,6 +223,14 @@ def evaluate_batch(
     leading axis and the whole circuit simulation runs as one vmapped,
     jitted solve per sample chunk — one XLA compilation for the entire
     group instead of one per configuration.
+
+    When the configurations carry a `TransientSpec` (cfg.transient —
+    identical across the batch by structure_key), the same stacked
+    tensors additionally run through ONE batched time-domain integration
+    (repro.transient), and the returned results report waveform-measured
+    `latency` and integrated `energy` (latency_source='transient')
+    instead of the analytic Elmore estimate, which stays available as
+    `latency_analytic`.
 
     Args:
       params: trained digital weights/biases [(W, b), ...].
@@ -270,18 +318,7 @@ def evaluate_batch(
             )
             for c in cfgs
         ]
-        g_pos = tuple(
-            jnp.stack([m[layer].g_pos for m in mapped_all])
-            for layer in range(n_layers)
-        )
-        g_neg = tuple(
-            jnp.stack([m[layer].g_neg for m in mapped_all])
-            for layer in range(n_layers)
-        )
-        k = tuple(
-            jnp.asarray([m[layer].k for m in mapped_all], dtype)
-            for layer in range(n_layers)
-        )
+        g_pos, g_neg, k = stack_mapped(mapped_all, dtype)
     scal = dict(
         r_seg=jnp.asarray([c.interconnect.r_segment for c in cfgs], dtype),
         r_source=jnp.asarray([c.r_source for c in cfgs], dtype),
@@ -291,6 +328,32 @@ def evaluate_batch(
             [c.resolved_tech().read_noise_rel for c in cfgs], dtype
         ),
     )
+
+    # Waveform-accurate timing/energy: the whole stacked configuration
+    # batch (sweep points or Monte-Carlo trials) integrates as ONE
+    # batched transient — structure_key guarantees a shared spec.
+    tspec = cfg0.transient
+    transient_res = None
+    if tspec is not None:
+        from repro.transient.engine import network_transient_stacked
+
+        if not parasitics:
+            raise ValueError(
+                "cfg.transient needs parasitics=True (the node "
+                "capacitances live on the parasitic wire grid)"
+            )
+        tr_scal = dict(
+            scal,
+            c_seg=jnp.asarray(
+                [c.interconnect.c_segment for c in cfgs], dtype
+            ),
+            t_samp=jnp.asarray([c.t_sampling for c in cfgs], dtype),
+        )
+        transient_res = network_transient_stacked(
+            g_pos, g_neg, k, tr_scal, plans, neuron, tspec,
+            jnp.asarray(x[: tspec.n_probe], dtype), v_unit, iters, tol,
+            dtype=dtype,
+        )
 
     def forward_all(gp, gn, kk, sc, xb, nkey):
         """Forward every stacked configuration over a chunk of samples.
@@ -364,11 +427,13 @@ def evaluate_batch(
     latency_memo: dict = {}
     for i, cfg in enumerate(cfgs):
         errors = int(jnp.sum((pred[i] != y).astype(jnp.int32)))
-        # Latency is input-independent (structural): derived analytically.
-        # Memoized by config identity — the T stacked trials of a
-        # Monte-Carlo point share one config object.
-        if id(cfg) not in latency_memo:
-            latency_memo[id(cfg)] = float(
+        # The analytic latency is input-independent (structural).
+        # Memoized by the fields it actually depends on — keying by
+        # id(cfg) would alias distinct configs when CPython reuses the
+        # address of a garbage-collected one.
+        memo_key = (cfg.interconnect, cfg.resolved_neuron(), cfg.t_sampling)
+        if memo_key not in latency_memo:
+            latency_memo[memo_key] = float(
                 sum(
                     jnp.asarray(
                         layer_latency(p, cfg.interconnect, cfg.resolved_neuron()),
@@ -378,13 +443,24 @@ def evaluate_batch(
                 )
                 + cfg.t_sampling
             )
-        latency = latency_memo[id(cfg)]
+        latency_an = latency_memo[memo_key]
         plp = per_layer_power[i]
+        avg_power = float(jnp.sum(plp))
+        if transient_res is not None:
+            latency = float(transient_res.latency[i])
+            energy = float(transient_res.energy[i])
+            source = "transient"
+            settled = bool(transient_res.settled[i])
+        else:
+            latency = latency_an
+            energy = avg_power * latency_an
+            source = "analytic"
+            settled = True
         results.append(
             IMACResult(
                 accuracy=1.0 - errors / n,
                 error_rate=errors / n,
-                avg_power=float(jnp.sum(plp)),
+                avg_power=avg_power,
                 latency=latency,
                 digital_accuracy=dig_acc,
                 per_layer_power=tuple(float(p) for p in plp),
@@ -392,6 +468,10 @@ def evaluate_batch(
                 n_samples=n,
                 hp=tuple(p.hp for p in plans),
                 vp=tuple(p.vp for p in plans),
+                energy=energy,
+                latency_analytic=latency_an,
+                latency_source=source,
+                settled=settled,
             )
         )
     return results

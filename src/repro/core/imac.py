@@ -17,6 +17,7 @@ import dataclasses
 from typing import TYPE_CHECKING, NamedTuple, Optional, Sequence
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only, avoids a cycle
+    from repro.transient.spec import TransientSpec
     from repro.variability.spec import VariabilitySpec
 
 import jax
@@ -73,6 +74,14 @@ class IMACConfig:
     # trials stack along the same leading config axis the design-space
     # engine already batches over.
     variability: "Optional[VariabilitySpec]" = None
+    # Optional waveform-accurate transient co-simulation attached to this
+    # design point (repro.transient.TransientSpec). When set, latency is
+    # measured from the integrated .tran waveforms (settling detection)
+    # and an integrated energy joins the result, instead of the
+    # input-independent analytic Elmore estimate. The spec's static
+    # fields shape the traced scan, so it participates in structure_key
+    # grouping.
+    transient: "Optional[TransientSpec]" = None
 
     def resolved_tech(self) -> DeviceTech:
         return get_tech(self.tech)
@@ -101,6 +110,20 @@ class LayerStats(NamedTuple):
     latency: jax.Array     # scalar, settling latency estimate (s)
     residual: jax.Array    # worst GS residual across tiles
     z: jax.Array           # (batch, fan_out) recovered pre-activations
+
+
+class TransientStats(NamedTuple):
+    """Waveform-derived statistics of one layer's transient integration.
+
+    All arrays carry the leading (C,) stacked-configuration axis of the
+    batched integration (repro.transient.engine).
+    """
+
+    t_settle: jax.Array    # (C,) measured settling time of the layer (s)
+    energy: jax.Array      # (C,) integrated dissipation over the horizon (J)
+    settled: jax.Array     # (C,) bool: output nodes in band at the horizon
+    dt: jax.Array          # final-pass step size (s) — the time resolution
+    waveform: Optional[jax.Array] = None  # (C, P, 2T, steps, N) foot voltages
 
 
 class IMACLayerOutput(NamedTuple):

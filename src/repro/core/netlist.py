@@ -15,13 +15,16 @@ from __future__ import annotations
 
 import io
 import re
-from typing import Dict, Sequence
+from typing import TYPE_CHECKING, Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.core.imac import IMACConfig
 from repro.core.mapping import MappedLayer
 from repro.core.partition import PartitionPlan, tile_matrix
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only, avoids a cycle
+    from repro.transient.spec import TransientSpec
 
 
 def _fmt(x: float) -> str:
@@ -33,6 +36,7 @@ def map_layer(
     mapped: MappedLayer,
     plan: PartitionPlan,
     cfg: IMACConfig,
+    transient: "Optional[TransientSpec]" = None,
 ) -> str:
     """Module 3: one layer's SPICE subcircuit (with parasitics + tiling).
 
@@ -41,7 +45,13 @@ def map_layer(
       out_<j>      — neuron outputs.
       t<t>_r_<i>_<j> / t<t>_cp_<i>_<j> / t<t>_cn_<i>_<j> — tile-internal
         row nodes and positive/negative column nodes.
+
+    With a `transient` spec (defaults to `cfg.transient`) the subcircuit
+    additionally states the periphery capacitances the time-domain
+    integrator assembles: driver output caps on row-head nodes, TIA
+    input caps on column-foot nodes.
     """
+    transient = transient if transient is not None else cfg.transient
     tech = cfg.resolved_tech()
     neuron = cfg.resolved_neuron()
     r_seg = cfg.interconnect.r_segment
@@ -70,6 +80,9 @@ def map_layer(
             for pol in ("p", "n"):
                 w(f"Rsrc_{t}{pol}_{i} {in_node} t{t}_{pol}r_{i}_0 "
                   f"{_fmt(cfg.r_source)}\n")
+                if transient is not None:
+                    w(f"Cdrv_{t}{pol}_{i} t{t}_{pol}r_{i}_0 0 "
+                      f"{_fmt(transient.c_driver)}\n")
                 for j in range(cols):
                     node = f"t{t}_{pol}r_{i}_{j}"
                     if j + 1 < cols:
@@ -90,6 +103,9 @@ def map_layer(
                     w(f"Ccw_{t}{pol}_{i}_{j} {node} 0 {_fmt(c_seg)}\n")
                 # TIA virtual ground at the column foot; the 0V source
                 # senses the column current (standard SPICE idiom).
+                if transient is not None:
+                    w(f"Ctia_{t}{pol}_{j} t{t}_c{pol}_{rows-1}_{j} 0 "
+                      f"{_fmt(transient.c_tia)}\n")
                 w(f"Rtia_{t}{pol}_{j} t{t}_c{pol}_{rows-1}_{j} "
                   f"t{t}_s{pol}_{j} {_fmt(cfg.r_tia)}\n")
                 w(f"Vsense_{t}{pol}_{j} t{t}_s{pol}_{j} 0 DC 0\n")
@@ -124,33 +140,63 @@ def map_imac(
     plans: Sequence[PartitionPlan],
     cfg: IMACConfig,
     sample: "np.ndarray | None" = None,
+    transient: "Optional[TransientSpec]" = None,
 ) -> Dict[str, str]:
     """Module 4: concatenate layer subcircuits into the main IMAC file.
 
     Returns {filename: contents}; `imac_main.sp` instantiates the layer
     chain, drives the inputs (from `sample` if given) and adds the
     analysis directives.
+
+    With a `transient` spec (defaults to `cfg.transient`) the main file
+    states exactly what the batched integrator (repro.transient)
+    integrates: PWL input ramps 0 -> v over [0, t_rise], a `.TRAN`
+    directive with the integrator's coarse step and horizon, the
+    integration method option, and the periphery capacitances in the
+    layer subcircuits.
     """
+    transient = transient if transient is not None else cfg.transient
     files: Dict[str, str] = {}
     lines = ["* IMAC-Sim-JAX generated netlist", ".OPTION POST"]
     lines.append(f"* topology: {[p.total_rows - 1 for p in plans]} -> "
                  f"{plans[-1].total_cols}")
+    if transient is not None:
+        method = "TRAP" if transient.method == "trap" else "GEAR"
+        lines.append(f".OPTION METHOD={method}")
     for idx, (mapped, plan) in enumerate(zip(mapped_layers, plans)):
         fname = f"layer{idx}.sp"
-        files[fname] = map_layer(idx, mapped, plan, cfg)
+        files[fname] = map_layer(idx, mapped, plan, cfg, transient=transient)
         lines.append(f".INCLUDE '{fname}'")
 
     vdd = cfg.vdd
     lines.append(f"VDD vdd 0 DC {_fmt(vdd)}")
     lines.append(f"VSS vss 0 DC {_fmt(cfg.vss)}")
     n_in = plans[0].total_rows - 1
+    t_rise = transient.resolved_t_rise() if transient is not None else 0.0
     for i in range(n_in):
         val = 0.0 if sample is None else float(sample[i]) * mapped_layers[0].v_unit
-        lines.append(f"Vin_{i} x0_{i} 0 DC {_fmt(val)}")
-    # Bias rows driven at v_unit.
+        if transient is not None:
+            # The integrator's drive: v(0) = 0, PWL ramp to the sample
+            # value over [0, t_rise], held to the horizon.
+            lines.append(
+                f"Vin_{i} x0_{i} 0 PWL(0 0 {_fmt(t_rise)} {_fmt(val)} "
+                f"{_fmt(transient.t_stop)} {_fmt(val)})"
+            )
+        else:
+            lines.append(f"Vin_{i} x0_{i} 0 DC {_fmt(val)}")
+    # Bias rows driven at v_unit (ramped like every other drive in a
+    # transient analysis — the integrator starts all nodes at 0 V).
     for idx, plan in enumerate(plans):
-        lines.append(f"Vbias_{idx} x{idx}_{plan.total_rows - 1} 0 DC "
-                     f"{_fmt(mapped_layers[idx].v_unit)}")
+        vb = mapped_layers[idx].v_unit
+        if transient is not None:
+            lines.append(
+                f"Vbias_{idx} x{idx}_{plan.total_rows - 1} 0 "
+                f"PWL(0 0 {_fmt(t_rise)} {_fmt(vb)} "
+                f"{_fmt(transient.t_stop)} {_fmt(vb)})"
+            )
+        else:
+            lines.append(f"Vbias_{idx} x{idx}_{plan.total_rows - 1} 0 DC "
+                         f"{_fmt(vb)}")
     # Chain the layer subcircuits: outputs of layer k are inputs of k+1.
     for idx, plan in enumerate(plans):
         ins = " ".join(f"x{idx}_{i}" for i in range(plan.total_rows))
@@ -159,7 +205,10 @@ def map_imac(
         )
         lines.append(f"Xlayer{idx} {ins} {outs} layer{idx}")
     lines.append(".OP")
-    lines.append(f".TRAN 1n {_fmt(cfg.t_sampling)}")
+    if transient is not None:
+        lines.append(f".TRAN {_fmt(transient.dt)} {_fmt(transient.t_stop)}")
+    else:
+        lines.append(f".TRAN 1n {_fmt(cfg.t_sampling)}")
     outs = " ".join(f"V(x{len(plans)}_{j})" for j in range(plans[-1].total_cols))
     lines.append(f".PRINT TRAN {outs}")
     lines.append(".END")
@@ -191,6 +240,49 @@ def parse_tile_conductances(
         else:
             gn[t, i, j] = g
     return gp, gn
+
+
+_TRAN_DIRECTIVE = re.compile(
+    r"^\.TRAN\s+(?P<step>[0-9.eE+-]+n?)\s+(?P<stop>[0-9.eE+-]+n?)\s*$",
+    re.M | re.I,
+)
+_PWL_SOURCE = re.compile(
+    r"^Vin_(?P<i>\d+)\s+\S+\s+\S+\s+PWL\((?P<pts>[^)]*)\)\s*$", re.M
+)
+_METHOD_OPT = re.compile(r"^\.OPTION\s+METHOD=(?P<m>\w+)\s*$", re.M | re.I)
+
+
+def _spice_num(tok: str) -> float:
+    """Parse a SPICE number with an optional 'n' (nano) suffix."""
+    if tok.lower().endswith("n"):
+        return float(tok[:-1]) * 1e-9
+    return float(tok)
+
+
+def parse_transient_directives(main: str) -> Dict[str, object]:
+    """Round-trip: recover the transient analysis a main file states.
+
+    Returns {'t_step', 't_stop', 'method', 'pwl'} where `pwl` maps input
+    index -> [(t, v), ...] breakpoints; inputs driven by DC sources
+    yield an empty pwl dict and method None when absent.
+    """
+    out: Dict[str, object] = {"t_step": None, "t_stop": None, "method": None}
+    m = _TRAN_DIRECTIVE.search(main)
+    if m:
+        out["t_step"] = _spice_num(m["step"])
+        out["t_stop"] = _spice_num(m["stop"])
+    m = _METHOD_OPT.search(main)
+    if m:
+        out["method"] = m["m"].lower()
+    pwl: Dict[int, list] = {}
+    for m in _PWL_SOURCE.finditer(main):
+        toks = m["pts"].split()
+        pwl[int(m["i"])] = [
+            (_spice_num(toks[k]), _spice_num(toks[k + 1]))
+            for k in range(0, len(toks) - 1, 2)
+        ]
+    out["pwl"] = pwl
+    return out
 
 
 def netlist_stats(files: Dict[str, str]) -> Dict[str, int]:

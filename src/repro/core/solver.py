@@ -140,11 +140,19 @@ def _align(value, ndim: int, dtype=None) -> jax.Array:
 
 
 def _row_system(
-    g: jax.Array, vc: jax.Array, v_in: jax.Array, cp: CircuitParams
+    g: jax.Array,
+    vc: jax.Array,
+    v_in: jax.Array,
+    cp: CircuitParams,
+    g_shunt=None,
+    i_inj=None,
 ):
     """Tridiagonal systems for all rows given column voltages.
 
     g, vc: (..., M, N); v_in: (..., M). Systems run along N.
+    `g_shunt`/`i_inj` add a per-node conductance to ground / current
+    injection — the companion-model stamps of node capacitors in a
+    transient step (repro.transient); both default to absent (pure DC).
     """
     n = g.shape[-1]
     dtype = g.dtype
@@ -160,19 +168,30 @@ def _row_system(
             jnp.where(idx == n - 1, g_row, 2.0 * g_row),
         )
     d = chain + g
+    if g_shunt is not None:
+        d = d + g_shunt
     off = jnp.broadcast_to(-g_row, g.shape)
     dl = off
     du = off
     b = g * vc
     b = b.at[..., 0].add(_align(cp.g_source, g.ndim - 1, dtype) * v_in)
+    if i_inj is not None:
+        b = b + i_inj
     return dl, d, du, b
 
 
-def _col_system(g: jax.Array, vr: jax.Array, cp: CircuitParams):
+def _col_system(
+    g: jax.Array,
+    vr: jax.Array,
+    cp: CircuitParams,
+    g_shunt=None,
+    i_inj=None,
+):
     """Tridiagonal systems for all columns given row voltages.
 
-    Transposed view: systems run along M. g, vr: (..., M, N).
-    Returns arrays shaped (..., N, M).
+    Transposed view: systems run along M. g, vr: (..., M, N);
+    `g_shunt`/`i_inj` are per-node capacitor companion stamps in the
+    untransposed (..., M, N) layout. Returns arrays shaped (..., N, M).
     """
     m = g.shape[-2]
     dtype = g.dtype
@@ -190,10 +209,14 @@ def _col_system(g: jax.Array, vr: jax.Array, cp: CircuitParams):
             jnp.where(idx == m - 1, g_col + g_tia, 2.0 * g_col),
         )
     d = chain + gt
+    if g_shunt is not None:
+        d = d + jnp.swapaxes(g_shunt, -1, -2)
     off = jnp.broadcast_to(-g_col, gt.shape)
     dl = off
     du = off
     b = gt * vrt  # TIA node is grounded: no extra rhs term.
+    if i_inj is not None:
+        b = b + jnp.swapaxes(i_inj, -1, -2)
     return dl, d, du, b
 
 
@@ -202,8 +225,14 @@ def solve_crossbar(
     v_in: jax.Array,
     cp: CircuitParams,
     tridiag: TridiagFn = tridiag_scan,
+    *,
+    g_shunt_row: "jax.Array | None" = None,
+    g_shunt_col: "jax.Array | None" = None,
+    i_inj_row: "jax.Array | None" = None,
+    i_inj_col: "jax.Array | None" = None,
+    v_init: "jax.Array | None" = None,
 ) -> CrossbarSolution:
-    """DC-solve crossbar tiles.
+    """Solve crossbar tiles (DC, or one implicit transient step).
 
     The electrical fields of `cp` may be python floats or arrays with
     leading batch axes aligned to g's leading axes — a design-space sweep
@@ -211,11 +240,24 @@ def solve_crossbar(
     solve (and one compilation) with a single while_loop; `gs_iters` and
     `tol` stay static.
 
+    With the optional companion-model stamps this same assembly solves
+    one implicit time step of the parasitic-RC network: a node capacitor
+    C discretized by backward-Euler/trapezoidal becomes a conductance to
+    ground (`g_shunt_*`, C/dt or 2C/dt) plus a history current source
+    (`i_inj_*`) — see repro.transient.integrator. `v_init` warm-starts
+    the Gauss–Seidel iteration (the previous time step's column
+    voltages), which is what makes few sweeps per step sufficient.
+
     Args:
       g: (..., M, N) memristor conductances (S). 0 = absent device.
       v_in: (..., M) driver voltages behind r_source.
       cp: circuit parameters.
       tridiag: batched tridiagonal solver (pluggable Pallas kernel).
+      g_shunt_row / g_shunt_col: optional (..., M, N) per-node extra
+        conductance to ground on row / column wire nodes.
+      i_inj_row / i_inj_col: optional (..., M, N) per-node current
+        injection into row / column wire nodes.
+      v_init: optional (..., M, N) initial column-node voltages.
 
     Returns:
       CrossbarSolution; i_out[..., j] = current into column j's TIA.
@@ -225,16 +267,28 @@ def solve_crossbar(
     m, n = g.shape[-2], g.shape[-1]
     # Broadcast conductances and drives to a common batch shape so the
     # loop carry and scan carries have fixed shapes.
-    batch = jnp.broadcast_shapes(g.shape[:-2], v_in.shape[:-1])
+    batch = jnp.broadcast_shapes(
+        g.shape[:-2],
+        v_in.shape[:-1],
+        *(
+            x.shape[:-2]
+            for x in (g_shunt_row, g_shunt_col, i_inj_row, i_inj_col, v_init)
+            if x is not None
+        ),
+    )
     g = jnp.broadcast_to(g, batch + (m, n))
     v_in = jnp.broadcast_to(v_in, batch + (m,))
-    vc0 = jnp.zeros_like(g)
+    vc0 = (
+        jnp.zeros_like(g)
+        if v_init is None
+        else jnp.broadcast_to(v_init.astype(g.dtype), g.shape)
+    )
     omega = _align(cp.omega, g.ndim, g.dtype)
 
     def sweep(vc):
-        dl, d, du, b = _row_system(g, vc, v_in, cp)
+        dl, d, du, b = _row_system(g, vc, v_in, cp, g_shunt_row, i_inj_row)
         vr = tridiag(dl, d, du, b)
-        dl, d, du, b = _col_system(g, vr, cp)
+        dl, d, du, b = _col_system(g, vr, cp, g_shunt_col, i_inj_col)
         vct = tridiag(dl, d, du, b)
         return vr, jnp.swapaxes(vct, -1, -2)
 
@@ -336,6 +390,19 @@ def _mna_matrix(g, v_in, cp: CircuitParams):
         p = c_idx(m - 1, j)
         a = a.at[p, p].add(cp.g_tia)
     return a, rhs
+
+
+def mna_system(
+    g: jax.Array, v_in: jax.Array, cp: CircuitParams
+) -> "tuple[jax.Array, jax.Array]":
+    """Public dense-MNA assembly of one tile: (A, rhs) with A (2MN, 2MN).
+
+    Node order: row nodes r(i,j) = i*N+j first, then column nodes
+    c(i,j) = M*N + i*N + j — the same order `node_capacitances` in
+    repro.transient.integrator flattens to, so the transient dense oracle
+    (C dv/dt = rhs - A v) can be built directly from these stamps.
+    """
+    return _mna_matrix(jnp.asarray(g), jnp.asarray(v_in), cp)
 
 
 def solve_dense_mna(g: jax.Array, v_in: jax.Array, cp: CircuitParams) -> CrossbarSolution:

@@ -1,0 +1,27 @@
+"""jax version compatibility shims for the distributed tricks.
+
+`jax.shard_map` (with `check_vma`) only exists in newer jax releases; on
+older ones the same transform lives at `jax.experimental.shard_map` and
+the replication-check flag is spelled `check_rep`. Route through one
+helper so the call sites stay version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(body, *, mesh, in_specs, out_specs):
+    """`jax.shard_map` with replication checking off, on any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

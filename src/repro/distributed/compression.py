@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.compat import shard_map_compat
+
 BLOCK = 256
 
 
@@ -113,12 +115,11 @@ def compressed_allreduce(
         return means, news
 
     specs = jax.tree_util.tree_map(lambda _: P(), grads)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(specs, specs),
         out_specs=(specs, specs),
-        check_vma=False,
     )
     mean, new_res = fn(grads, state.residual)
     return mean, CompressionState(residual=new_res)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.compat import shard_map_compat
+
 
 def ring_allgather_matmul(
     x: jax.Array,
@@ -63,11 +65,10 @@ def ring_allgather_matmul(
         acc, _ = jax.lax.fori_loop(0, n, step, (acc0, w_l))
         return acc
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(P(), P(axis_name, None)),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(x, w)

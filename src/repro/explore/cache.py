@@ -146,6 +146,10 @@ class ResultCache:
             n_samples=r["n_samples"],
             hp=tuple(r["hp"]),
             vp=tuple(r["vp"]),
+            energy=r.get("energy", 0.0),
+            latency_analytic=r.get("latency_analytic", 0.0),
+            latency_source=r.get("latency_source", "analytic"),
+            settled=r.get("settled", True),
         )
 
     def put(

@@ -53,6 +53,7 @@ from repro.explore.cache import (
 )
 from repro.explore.pareto import DEFAULT_OBJECTIVES, pareto_front
 from repro.explore.spec import SweepSpec
+from repro.transient.spec import TransientSpec
 from repro.variability.engine import expand_trials, run_variability, trial_keys
 from repro.variability.report import ReliabilityReport, summarize
 
@@ -105,6 +106,7 @@ def run_sweep(
     variation_key: Optional[jax.Array] = None,
     noise_key: Optional[jax.Array] = None,
     activation: str = "sigmoid",
+    timing: "bool | TransientSpec | None" = None,
     verbose: bool = False,
 ) -> "list[SweepResult]":
     """Evaluate a design-space sweep with batching and memoization.
@@ -127,12 +129,29 @@ def run_sweep(
         Reliability points ignore both — see `points` above — so their
         cache entries survive changes to either.
       activation: digital reference activation.
+      timing: timing mode — run every point through the batched transient
+        co-simulation (repro.transient) so results report
+        waveform-measured latency and integrated energy. True uses a
+        default TransientSpec; a TransientSpec applies that one. Points
+        that already carry cfg.transient keep their own spec. Pair with
+        `pareto.TRANSIENT_OBJECTIVES` for energy-aware extraction.
       verbose: print per-group progress lines.
 
     Returns:
       One SweepResult per point, in input order.
     """
     items = _as_points(points)
+    if timing:
+        tspec = timing if isinstance(timing, TransientSpec) else TransientSpec()
+        items = [
+            (
+                name,
+                cfg
+                if cfg.transient is not None
+                else dataclasses.replace(cfg, transient=tspec),
+            )
+            for name, cfg in items
+        ]
     if isinstance(cache, str):
         cache = ResultCache(cache)
     topology = [params[0][0].shape[0]] + [w.shape[1] for w, _ in params]

@@ -30,6 +30,17 @@ RELIABILITY_OBJECTIVES = (
     ("latency", "min"),
 )
 
+# Timing/energy objectives for transient (waveform-accurate) sweeps
+# (cfg.transient set, or run_sweep(..., timing=...)): trade accuracy
+# against integrated energy per inference and measured settling latency.
+# Deterministic points without a transient spec still expose `energy`
+# (avg_power x latency estimate), so mixed sweeps extract cleanly.
+TRANSIENT_OBJECTIVES = (
+    ("accuracy", "max"),
+    ("energy", "min"),
+    ("latency", "min"),
+)
+
 
 def pareto_mask(points: np.ndarray, maximize: "Sequence[bool]") -> np.ndarray:
     """Boolean mask of non-dominated rows.

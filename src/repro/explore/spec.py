@@ -19,6 +19,16 @@ reliability sweep whose points evaluate to `ReliabilityReport`s:
   * ``fault_rate=r``   -> ``p_stuck_on=r/2, p_stuck_off=r/2``
   * ``variability``    -> a whole VariabilitySpec (or None) per value
 
+Transient (waveform-accurate timing) axes likewise attach a
+`TransientSpec`, turning the sweep into a timing sweep whose points
+report measured settling latency and integrated energy:
+
+  * ``t_stop``, ``tran_steps``, ``tran_method``, ``t_rise``,
+    ``tran_rtol``, ``c_driver``, ``c_tia``, ``n_probe``
+                       -> the matching TransientSpec field
+  * ``transient``      -> a whole TransientSpec (or None) per value
+  * ``cap_scale=s``    -> scale ``interconnect.cap_per_m`` by ``s``
+
 Example::
 
     spec = SweepSpec.grid(
@@ -44,6 +54,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.imac import IMACConfig
+from repro.transient.spec import TransientSpec
 from repro.variability.spec import VariabilitySpec
 
 # Axis name -> VariabilitySpec field for the reliability conveniences.
@@ -58,11 +69,32 @@ _VARIABILITY_AXES = {
     "acc_threshold": "acc_threshold",
 }
 
+# Axis name -> TransientSpec field for the timing conveniences. Each
+# attaches a TransientSpec to the point (creating a default one on first
+# use), turning the sweep into a waveform-accurate timing sweep.
+_TRANSIENT_AXES = {
+    "t_stop": "t_stop",
+    "tran_steps": "n_steps",
+    "tran_method": "method",
+    "t_rise": "t_rise",
+    "tran_rtol": "rtol",
+    "c_driver": "c_driver",
+    "c_tia": "c_tia",
+    "n_probe": "n_probe",
+}
+
 
 def _with_variability(cfg: IMACConfig, **fields) -> IMACConfig:
     vspec = cfg.variability or VariabilitySpec()
     return dataclasses.replace(
         cfg, variability=dataclasses.replace(vspec, **fields)
+    )
+
+
+def _with_transient(cfg: IMACConfig, **fields) -> IMACConfig:
+    tspec = cfg.transient or TransientSpec()
+    return dataclasses.replace(
+        cfg, transient=dataclasses.replace(tspec, **fields)
     )
 
 
@@ -79,13 +111,25 @@ def _apply_axis(cfg: IMACConfig, field: str, value) -> IMACConfig:
         return _with_variability(
             cfg, p_stuck_on=value / 2.0, p_stuck_off=value / 2.0
         )
+    if field == "cap_scale":
+        # Scale the interconnect capacitance per segment — the c of every
+        # RC settling time constant (transient crossvalidation sweeps).
+        return dataclasses.replace(
+            cfg,
+            interconnect=dataclasses.replace(
+                cfg.interconnect, cap_per_m=cfg.interconnect.cap_per_m * value
+            ),
+        )
     if field in _VARIABILITY_AXES:
         return _with_variability(cfg, **{_VARIABILITY_AXES[field]: value})
+    if field in _TRANSIENT_AXES:
+        return _with_transient(cfg, **{_TRANSIENT_AXES[field]: value})
     if not hasattr(cfg, field):
         raise ValueError(
             f"unknown sweep axis {field!r}: not an IMACConfig field "
             f"(compound axes: 'array_size', 'partition', 'fault_rate', "
-            f"{sorted(_VARIABILITY_AXES)})"
+            f"'cap_scale', {sorted(_VARIABILITY_AXES)}, "
+            f"{sorted(_TRANSIENT_AXES)})"
         )
     return dataclasses.replace(cfg, **{field: value})
 
@@ -96,14 +140,16 @@ def _fmt(value) -> str:
         return "x".join(_fmt(v) for v in value)
     if isinstance(value, float):
         return f"{value:g}"
-    if isinstance(value, VariabilitySpec):
-        # Non-default fields only: mc(trials=16,sigma_rel=0.1).
+    if isinstance(value, (VariabilitySpec, TransientSpec)):
+        # Non-default fields only: mc(trials=16,sigma_rel=0.1) /
+        # tran(n_steps=64,method=be).
+        tag = "mc" if isinstance(value, VariabilitySpec) else "tran"
         diffs = [
             f"{f.name}={_fmt(getattr(value, f.name))}"
             for f in dataclasses.fields(value)
             if getattr(value, f.name) != f.default
         ]
-        return f"mc({','.join(diffs)})" if diffs else "mc()"
+        return f"{tag}({','.join(diffs)})" if diffs else f"{tag}()"
     return str(value)
 
 

@@ -1,0 +1,26 @@
+"""repro.transient — batched waveform-accurate transient co-simulation.
+
+Public API:
+  TransientSpec       — declarative transient analysis specification
+  TransientStats      — per-layer waveform-derived statistics
+  TransientResult     — network-level latency / energy / settled arrays
+  run_transient       — one stacked integration over compatible configs
+  crossvalidate_settling — measured settling vs analytic RC ordering
+  integrate_tiles / node_capacitances / settle_time — the integrator core
+"""
+from repro.core.imac import TransientStats  # noqa: F401
+from repro.transient.engine import (  # noqa: F401
+    TransientResult,
+    analytic_latency,
+    crossvalidate_settling,
+    layer_transient,
+    network_transient_stacked,
+    run_transient,
+)
+from repro.transient.integrator import (  # noqa: F401
+    TileTransient,
+    integrate_tiles,
+    node_capacitances,
+    settle_time,
+)
+from repro.transient.spec import TransientSpec  # noqa: F401

@@ -1,0 +1,364 @@
+"""Batched transient co-simulation of mapped IMAC networks.
+
+One stacked integration answers the timing/energy question for a whole
+batch of structurally-compatible configurations (design-space sweep
+points, Monte-Carlo trials): conductances and electrical scalars ride a
+leading (C,) axis, exactly as in `core.evaluate.evaluate_batch`'s DC
+path, and each layer's parasitic RC network is integrated with the
+implicit fixed-step engine in `repro.transient.integrator`.
+
+Semantics mirror the analytic latency model they replace: each layer's
+transient is driven by the layer's DC input activations (the behavioural
+neuron decouples consecutive crossbars, as IMAC-Sim's subcircuits do),
+network latency is the sum of per-layer measured settling times plus the
+sampling window, and network energy integrates crossbar dissipation over
+the horizon plus the static interface power.
+
+Adaptive refinement: after the coarse pass over [0, t_stop], the window
+[0, max settling + margin] is re-integrated with the same step count —
+`dt` is a traced scalar, so every pass reuses one compiled scan and the
+whole batch refines together (the window is the batch max: still ONE
+stacked integration, never a per-config loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.digital import Params
+from repro.core.evaluate import stack_mapped, structure_key
+from repro.core.imac import (
+    IMACConfig,
+    TransientStats,
+    build_plans,
+    layer_latency,
+)
+from repro.core.mapping import map_network
+from repro.core.partition import combine_outputs, tile_inputs, tile_matrix
+from repro.core.solver import (
+    CircuitParams,
+    _align,
+    solve_crossbar,
+    suggest_iters,
+)
+from repro.transient.integrator import (
+    integrate_tiles,
+    node_capacitances,
+    settle_time,
+)
+from repro.transient.spec import TransientSpec
+
+
+class TransientResult(NamedTuple):
+    """Network-level outcome of one stacked transient co-simulation."""
+
+    latency: jax.Array        # (C,) sum of layer settling + sampling (s)
+    energy: jax.Array         # (C,) integrated energy per inference (J)
+    settled: jax.Array        # (C,) bool: every layer in band at its horizon
+    layers: "tuple[TransientStats, ...]"  # per-layer detail
+
+    @property
+    def layer_settle(self) -> "tuple[jax.Array, ...]":
+        return tuple(s.t_settle for s in self.layers)
+
+
+def layer_transient(
+    g_pos: jax.Array,
+    g_neg: jax.Array,
+    plan,
+    cp: CircuitParams,
+    spec: TransientSpec,
+    a: jax.Array,
+    v_unit,
+    *,
+    c_segment,
+    dtype=jnp.float32,
+    record: bool = False,
+) -> "tuple[TransientStats, jax.Array]":
+    """Integrate one layer's parasitic crossbars for a probe batch.
+
+    Args:
+      g_pos / g_neg: (..., fan_in+1, fan_out) stacked conductances.
+      plan: the layer's partition plan.
+      cp: electrical parameters (leading-axis scalars allowed).
+      spec: transient specification.
+      a: (..., P, fan_in) probe activations in digital units.
+      v_unit: drive voltage per digital unit.
+      c_segment: wire capacitance per segment — float or (C,) stacked.
+      record: keep the final-pass waveform.
+
+    Returns:
+      (TransientStats, i_out_ss): the stats carry the leading config
+      axis reduced over probes and tiles (settling: worst case; energy:
+      probe mean, tile sum); i_out_ss is the (..., P, 2T, N) DC
+      steady-state TIA currents — the operating point the transient
+      settles onto, which the network engine chains activations from
+      without a second DC solve.
+    """
+    ones = jnp.ones(a.shape[:-1] + (1,), dtype)
+    v = jnp.concatenate([a.astype(dtype), ones], axis=-1) * v_unit
+    tiles_p = tile_matrix(g_pos.astype(dtype), plan)
+    tiles_n = tile_matrix(g_neg.astype(dtype), plan)
+    g_all = jnp.concatenate([tiles_p, tiles_n], axis=-3)   # (..., 2T, M, N)
+    v_tiles = tile_inputs(v, plan)                         # (..., P, hp, M)
+    v_per_tile = jnp.repeat(v_tiles, plan.vp, axis=-2)     # (..., P, T, M)
+    v_all = jnp.concatenate([v_per_tile, v_per_tile], axis=-2)
+    g_b = g_all[..., None, :, :, :]                        # (..., 1, 2T, M, N)
+
+    # Node capacitances, aligned against g_b's (C, P, 2T, M, N) batch.
+    cseg = jnp.asarray(c_segment, dtype)
+    if cseg.ndim > 0:
+        cseg = cseg[..., None, None]  # (C, 1, 1): broadcast over P and 2T
+    c_row, c_col = node_capacitances(
+        plan.rows, plan.cols, cseg, spec.c_driver, spec.c_tia, dtype
+    )
+
+    # One full-budget DC solve: the settling-band reference for every
+    # refinement pass AND the operating point downstream layers chain
+    # from.
+    ss = solve_crossbar(g_b, v_all, cp)
+
+    t_rise = spec.resolved_t_rise()
+    dt0 = spec.t_stop / spec.n_steps
+    record_now = record and spec.refine_passes == 0
+    res = integrate_tiles(
+        g_b, v_all, cp, spec, dt0,
+        c_row=c_row, c_col=c_col, t_rise=t_rise, record=record_now, ss=ss,
+    )
+    # Reduce probes (axis -2) and tiles (axis -1) of the (C, P, 2T) batch;
+    # leading config/trial axes survive.
+    last = jnp.max(res.last_oob, axis=(-1, -2))
+    settle = settle_time(last, dt0, spec.n_steps)
+    # Energy over the full horizon from the coarse pass (second-order
+    # trapezoidal quadrature): sum tiles, average probes.
+    energy = jnp.mean(jnp.sum(res.energy, axis=-1), axis=-1)
+    dt_cur = jnp.asarray(dt0, dtype)
+    for p in range(spec.refine_passes):
+        window = jnp.minimum(
+            spec.t_stop, jnp.max(settle) + spec.refine_margin * dt_cur
+        )
+        dt_cur = window / spec.n_steps
+        record_now = record and p == spec.refine_passes - 1
+        res = integrate_tiles(
+            g_b, v_all, cp, spec, dt_cur,
+            c_row=c_row, c_col=c_col, t_rise=t_rise, record=record_now,
+            ss=ss,
+        )
+        last = jnp.max(res.last_oob, axis=(-1, -2))
+        settle = settle_time(last, dt_cur, spec.n_steps)
+    settled = last < spec.n_steps - 1
+    stats = TransientStats(
+        t_settle=settle,
+        energy=energy,
+        settled=settled,
+        dt=dt_cur,
+        waveform=res.waveform if record else None,
+    )
+    return stats, ss.i_out
+
+
+def network_transient_stacked(
+    g_pos: "Sequence[jax.Array]",
+    g_neg: "Sequence[jax.Array]",
+    k: "Sequence[jax.Array]",
+    scal: dict,
+    plans,
+    neuron,
+    spec: TransientSpec,
+    x_probe: jax.Array,
+    v_unit,
+    iters: "Sequence[int]",
+    tol: float,
+    dtype=jnp.float32,
+    record: bool = False,
+) -> TransientResult:
+    """Transient co-simulation of a stacked configuration batch.
+
+    Consumes exactly the stacked form `core.evaluate.evaluate_batch`
+    assembles: per-layer (C, fan_in+1, fan_out) conductances, (C,) sense
+    scales, and a `scal` dict of (C,) electrical scalars (r_seg,
+    r_source, r_tia, omega, plus c_seg and t_samp for the transient).
+    The whole network — every layer, every refinement pass — runs as one
+    jitted computation.
+    """
+    n_layers = len(plans)
+
+    def run(gp, gn, kk, sc, xb):
+        a = xb
+        stats = []
+        for layer, plan in enumerate(plans):
+            cp = CircuitParams(
+                r_row=sc["r_seg"],
+                r_col=sc["r_seg"],
+                r_source=sc["r_source"],
+                r_tia=sc["r_tia"],
+                gs_iters=iters[layer],
+                omega=sc["omega"],
+                tol=tol,
+            )
+            s, i_out_ss = layer_transient(
+                gp[layer], gn[layer], plan, cp, spec, a, v_unit,
+                c_segment=sc["c_seg"], dtype=dtype, record=record,
+            )
+            stats.append(s)
+            # Chain probe activations through the DC operating point the
+            # transient settles onto (noise-free, as the analytic latency
+            # model assumes) — reusing the layer's steady-state solve.
+            nt = plan.n_tiles
+            i_diff = combine_outputs(i_out_ss[..., :nt, :], plan) - (
+                combine_outputs(i_out_ss[..., nt:, :], plan)
+            )
+            z = i_diff / (_align(kk[layer], i_diff.ndim, dtype) * v_unit)
+            z = neuron.clip_preactivation(z)
+            a = z if layer == n_layers - 1 else neuron.activation(z)
+        # Static interface power burns for the whole horizon per layer.
+        energy = jnp.zeros_like(stats[0].energy)
+        for plan, s in zip(plans, stats):
+            n_amps = plan.hp * plan.vp * plan.cols * 2
+            p_iface = n_amps * neuron.p_amp + plan.total_cols * neuron.p_neuron
+            energy = energy + s.energy + p_iface * spec.t_stop
+        settle = sum(s.t_settle for s in stats)
+        settled = stats[0].settled
+        for s in stats[1:]:
+            settled = jnp.logical_and(settled, s.settled)
+        return TransientResult(
+            latency=settle + sc["t_samp"],
+            energy=energy,
+            settled=settled,
+            layers=tuple(stats),
+        )
+
+    return jax.jit(run)(
+        tuple(g_pos), tuple(g_neg), tuple(k), scal, x_probe
+    )
+
+
+def run_transient(
+    params: Params,
+    cfgs: "Sequence[IMACConfig] | IMACConfig",
+    x: jax.Array,
+    *,
+    spec: Optional[TransientSpec] = None,
+    record: bool = False,
+) -> TransientResult:
+    """Waveform-accurate latency & energy of one or more configurations.
+
+    All configurations must be structurally compatible (same partition
+    plans, neuron, dtype — as grouped by `core.evaluate.structure_key`);
+    they stack along a leading axis and integrate as ONE batched scan.
+
+    Args:
+      params: trained digital weights/biases [(W, b), ...].
+      cfgs: one IMACConfig or a structurally-compatible list.
+      x: (N, fan_in) inputs; the first `spec.n_probe` rows drive the
+        transient.
+      spec: overrides the configs' own `transient` field (a default
+        TransientSpec if neither is set).
+      record: keep final-pass waveforms in the per-layer stats.
+
+    Returns:
+      TransientResult with (C,) latency / energy / settled arrays.
+    """
+    if isinstance(cfgs, IMACConfig):
+        cfgs = [cfgs]
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("need at least one configuration")
+    cfg0 = cfgs[0]
+    spec = spec or cfg0.transient or TransientSpec()
+    topology = [params[0][0].shape[0]] + [w.shape[1] for w, _ in params]
+    key0 = structure_key(topology, cfg0)
+    for c in cfgs:
+        if not c.parasitics:
+            raise ValueError(
+                "transient co-simulation needs parasitics=True (the node "
+                "capacitances live on the parasitic wire grid)"
+            )
+        if structure_key(topology, c) != key0 or c.vdd != cfg0.vdd:
+            raise ValueError(
+                "run_transient needs structurally-compatible configs "
+                "(equal structure_key and vdd); got a mismatch — group "
+                "them with repro.explore.run_sweep(timing=...) instead"
+            )
+    plans = build_plans(topology, cfg0)
+    dtype = cfg0.dtype
+    iters = [cfg0.gs_iters or suggest_iters(p.rows, p.cols) for p in plans]
+    mapped = [
+        map_network(params, c.resolved_tech(), v_unit=c.vdd, quantize=c.quantize)
+        for c in cfgs
+    ]
+    g_pos, g_neg, k = stack_mapped(mapped, dtype)
+    scal = dict(
+        r_seg=jnp.asarray([c.interconnect.r_segment for c in cfgs], dtype),
+        r_source=jnp.asarray([c.r_source for c in cfgs], dtype),
+        r_tia=jnp.asarray([c.r_tia for c in cfgs], dtype),
+        omega=jnp.asarray([c.sor_omega for c in cfgs], dtype),
+        c_seg=jnp.asarray([c.interconnect.c_segment for c in cfgs], dtype),
+        t_samp=jnp.asarray([c.t_sampling for c in cfgs], dtype),
+    )
+    x_probe = jnp.asarray(x[: spec.n_probe], dtype)
+    return network_transient_stacked(
+        g_pos, g_neg, k, scal, plans, cfg0.resolved_neuron(), spec,
+        x_probe, cfg0.vdd, iters, cfg0.gs_tol, dtype=dtype, record=record,
+    )
+
+
+def analytic_latency(cfg: IMACConfig, topology: "Sequence[int]") -> float:
+    """The input-independent Elmore estimate the waveform path replaces."""
+    plans = build_plans(topology, cfg)
+    neuron = cfg.resolved_neuron()
+    return (
+        sum(layer_latency(p, cfg.interconnect, neuron) for p in plans)
+        + cfg.t_sampling
+    )
+
+
+def crossvalidate_settling(
+    params: Params,
+    x: jax.Array,
+    base_cfg: Optional[IMACConfig] = None,
+    *,
+    cap_scales: "Sequence[float]" = (0.5, 1.0, 2.0, 4.0),
+    spec: Optional[TransientSpec] = None,
+) -> "list[dict]":
+    """Cross-validate measured settling against the analytic RC estimate.
+
+    Scales the interconnect capacitance per segment (the c in every RC
+    time constant) and runs ONE stacked integration over all scalings —
+    they share a structure_key since c_segment is a numeric leaf. The
+    analytic Elmore latency is linear in c_segment, so the measured
+    settling times must reproduce its ordering (and be nondecreasing in
+    c_segment); tests and benchmarks/transient_bench.py assert this.
+
+    Returns:
+      One record per scale: {scale, c_segment, analytic, measured,
+      energy, settled}.
+    """
+    base_cfg = base_cfg or IMACConfig()
+    spec = spec or base_cfg.transient or TransientSpec()
+    topology = [params[0][0].shape[0]] + [w.shape[1] for w, _ in params]
+    cfgs = [
+        dataclasses.replace(
+            base_cfg,
+            interconnect=dataclasses.replace(
+                base_cfg.interconnect,
+                cap_per_m=base_cfg.interconnect.cap_per_m * s,
+            ),
+        )
+        for s in cap_scales
+    ]
+    tr = run_transient(params, cfgs, x, spec=spec)
+    return [
+        {
+            "scale": float(s),
+            "c_segment": cfg.interconnect.c_segment,
+            "analytic": analytic_latency(cfg, topology),
+            "measured": float(tr.latency[i]),
+            "energy": float(tr.energy[i]),
+            "settled": bool(tr.settled[i]),
+        }
+        for i, (s, cfg) in enumerate(zip(cap_scales, cfgs))
+    ]

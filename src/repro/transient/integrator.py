@@ -1,0 +1,235 @@
+"""Batch-first implicit time-domain integrator over the crossbar MNA.
+
+The parasitic crossbar is a linear RC network: conductance stamps G (the
+same assembly the DC solver sweeps) plus a *diagonal* capacitance matrix
+C — every wire node carries `Interconnect.c_segment` to ground, row-head
+nodes add the driver output capacitance and column-foot nodes the TIA
+input capacitance (exactly the Crw/Ccw/Cdrv/Ctia elements the generated
+netlist states). Discretizing C dv/dt = b(t) - G v with an implicit rule
+turns each time step into a DC solve of the *same* network with a
+companion conductance to ground and a history current injection per
+node:
+
+  backward Euler:  g_eq = C/dt,  i_eq = g_eq * v_n
+  trapezoidal:     g_eq = 2C/dt, i_eq = g_eq * v_n + i_c_n,
+                   i_c_{n+1} = g_eq * (v_{n+1} - v_n) - i_c_n
+
+so the step solve reuses `solve_crossbar`'s alternating batched
+tridiagonal Gauss–Seidel unchanged (the stamps only fatten the diagonal,
+which *improves* its convergence rate), warm-started from the previous
+step. Everything — configs, trials, probe samples, tiles — rides leading
+batch axes through one `lax.scan`, which is what lets a design-space
+sweep or a Monte-Carlo trial batch integrate as ONE stacked scan instead
+of a per-config Python loop (see benchmarks/transient_bench.py).
+
+`dt` enters only through companion values, never through shapes, so it
+may be a traced scalar: the adaptive refinement passes in
+repro.transient.engine re-invoke the same compiled integration with a
+shrunken, data-dependent step size.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver import (
+    CircuitParams,
+    CrossbarSolution,
+    TridiagFn,
+    _align,
+    crossbar_power,
+    solve_crossbar,
+    tridiag_scan,
+)
+from repro.transient.spec import TransientSpec
+
+
+def node_capacitances(
+    m: int,
+    n: int,
+    c_segment,
+    c_driver: float,
+    c_tia: float,
+    dtype=jnp.float32,
+) -> "tuple[jax.Array, jax.Array]":
+    """Per-node capacitance maps of one M x N tile.
+
+    Args:
+      m, n: tile rows / cols.
+      c_segment: wire capacitance per bitcell segment (farads); a float
+        or an array with leading config axes (aligned like the solver's
+        electrical scalars).
+      c_driver: extra capacitance on each row-head node (j = 0).
+      c_tia: extra capacitance on each column-foot node (i = M-1).
+
+    Returns:
+      (c_row, c_col): (..., M, N) capacitances of row and column wire
+      nodes, in the same (i, j) layout the solver uses — flattening row
+      nodes then column nodes reproduces `mna_system`'s node order.
+    """
+    cseg = jnp.asarray(c_segment, dtype)
+    cseg = _align(cseg, cseg.ndim + 2, dtype)  # append (1, 1) node axes
+    col_idx = jnp.arange(n)
+    row_idx = jnp.arange(m)[:, None]
+    c_row = jnp.broadcast_to(cseg, cseg.shape[:-2] + (m, n)) + jnp.where(
+        col_idx == 0, jnp.asarray(c_driver, dtype), 0.0
+    )
+    c_col = jnp.broadcast_to(cseg, cseg.shape[:-2] + (m, n)) + jnp.where(
+        row_idx == m - 1, jnp.asarray(c_tia, dtype), 0.0
+    )
+    return c_row, c_col
+
+
+class TileTransient(NamedTuple):
+    """Result of one stacked fixed-step integration of crossbar tiles.
+
+    Batch shape (...) is the broadcast of g's and v_in's leading axes
+    (configs/trials x probes x tiles).
+    """
+
+    last_oob: jax.Array    # (...) int32: last step index out of band (-1: never)
+    energy: jax.Array      # (...) integral of dissipated power over the horizon (J)
+    i_out: jax.Array       # (..., N) TIA currents at t_stop
+    i_out_ss: jax.Array    # (..., N) steady-state (DC) TIA currents
+    vc_foot: jax.Array     # (..., N) column-foot voltages at t_stop
+    waveform: jax.Array    # (..., steps, N) column-foot voltages, or () if not recorded
+
+
+def integrate_tiles(
+    g: jax.Array,
+    v_in: jax.Array,
+    cp: CircuitParams,
+    spec: TransientSpec,
+    dt,
+    *,
+    c_row: jax.Array,
+    c_col: jax.Array,
+    t_rise: float,
+    tridiag: TridiagFn = tridiag_scan,
+    record: bool = False,
+    ss: "CrossbarSolution | None" = None,
+) -> TileTransient:
+    """Integrate crossbar tiles over `spec.n_steps` implicit steps of `dt`.
+
+    Args:
+      g: (..., M, N) memristor conductances; leading axes batch configs,
+        probes and tiles together.
+      v_in: (..., M) final driver voltages; ramped 0 -> v_in over
+        [0, t_rise] (PWL drive), v(0) = 0 everywhere.
+      cp: electrical parameters (per-config leading-axis scalars allowed,
+        exactly as in the DC solve). `cp.gs_iters`/`cp.tol` are ignored
+        for the steps — `spec.gs_iters` sweeps run per step; the
+        steady-state reference solve uses `cp` as given.
+      spec: transient specification (static fields shape the scan).
+      dt: step size in seconds — python float or traced scalar.
+      c_row / c_col: (..., M, N) node capacitances (`node_capacitances`).
+      t_rise: resolved input ramp time (static float).
+      record: stack the column-foot waveform (memory: steps x N per
+        batch element).
+      ss: optional precomputed DC steady state of (g, v_in, cp) — the
+        settling-band reference. Callers running several refinement
+        passes pass it once instead of re-solving per pass.
+
+    Returns:
+      TileTransient; settling is reported as `last_oob` (step index) so
+      the caller converts to seconds with its own dt and reduces over
+      non-config axes.
+    """
+    g = jnp.asarray(g)
+    v_in = jnp.asarray(v_in)
+    m = g.shape[-2]
+    dtype = g.dtype
+    dt = jnp.asarray(dt, dtype)
+
+    # Steady state the waveforms settle to (full-budget DC solve).
+    if ss is None:
+        ss = solve_crossbar(g, v_in, cp, tridiag=tridiag)
+    vc_ss_foot = ss.vc[..., m - 1, :]
+    band = spec.rtol * jnp.max(jnp.abs(vc_ss_foot), axis=-1, keepdims=True) + spec.atol
+
+    cp_step = CircuitParams(
+        r_row=cp.r_row,
+        r_col=cp.r_col,
+        r_source=cp.r_source,
+        r_tia=cp.r_tia,
+        gs_iters=spec.gs_iters,
+        omega=cp.omega,
+        tol=0.0,
+    )
+    trap = spec.method == "trap"
+    fac = 2.0 if trap else 1.0
+    geq_r = fac * c_row.astype(dtype) / dt
+    geq_c = fac * c_col.astype(dtype) / dt
+    g_tia = _align(cp.g_tia, g.ndim - 1, dtype)
+
+    batch = jnp.broadcast_shapes(
+        g.shape[:-2], v_in.shape[:-1], geq_r.shape[:-2]
+    )
+    zeros_nodes = jnp.zeros(batch + g.shape[-2:], dtype)
+
+    def step(carry, t):
+        vr, vc, ic_r, ic_c, p_prev, e_acc, last_oob, k = carry
+        ramp = jnp.clip(t / t_rise, 0.0, 1.0)
+        v_t = v_in * ramp
+        inj_r = geq_r * vr + (ic_r if trap else 0.0)
+        inj_c = geq_c * vc + (ic_c if trap else 0.0)
+        sol = solve_crossbar(
+            g,
+            v_t,
+            cp_step,
+            tridiag=tridiag,
+            g_shunt_row=geq_r,
+            g_shunt_col=geq_c,
+            i_inj_row=jnp.broadcast_to(inj_r, zeros_nodes.shape),
+            i_inj_col=jnp.broadcast_to(inj_c, zeros_nodes.shape),
+            v_init=vc,
+        )
+        if trap:
+            ic_r = geq_r * (sol.vr - vr) - ic_r
+            ic_c = geq_c * (sol.vc - vc) - ic_c
+        p_t = crossbar_power(g, v_t, sol, cp)
+        e_acc = e_acc + 0.5 * (p_prev + p_t) * dt
+        foot = sol.vc[..., m - 1, :]
+        oob = jnp.any(jnp.abs(foot - vc_ss_foot) > band, axis=-1)
+        last_oob = jnp.where(oob, k, last_oob)
+        out = foot if record else jnp.zeros(batch + (0,), dtype)
+        return (sol.vr, sol.vc, ic_r, ic_c, p_t, e_acc, last_oob, k + 1), out
+
+    ts = dt * (1.0 + jnp.arange(spec.n_steps, dtype=dtype))
+    init = (
+        zeros_nodes,                       # vr(0)
+        zeros_nodes,                       # vc(0)
+        jnp.zeros_like(geq_r * zeros_nodes),  # capacitor history currents
+        jnp.zeros_like(geq_c * zeros_nodes),
+        jnp.zeros(batch, dtype),           # p(0) = 0 (all nodes at 0 V)
+        jnp.zeros(batch, dtype),           # energy accumulator
+        jnp.full(batch, -1, jnp.int32),    # last out-of-band step
+        jnp.zeros((), jnp.int32),
+    )
+    (vr, vc, _, _, _, energy, last_oob, _), wave = jax.lax.scan(step, init, ts)
+    foot = vc[..., m - 1, :]
+    waveform = (
+        jnp.moveaxis(wave, 0, -2) if record else jnp.zeros(())
+    )
+    return TileTransient(
+        last_oob=last_oob,
+        energy=energy,
+        i_out=g_tia * foot,
+        i_out_ss=ss.i_out,
+        vc_foot=foot,
+        waveform=waveform,
+    )
+
+
+def settle_time(last_oob: jax.Array, dt, n_steps: int):
+    """Settling time implied by `last_oob` at step size `dt` (seconds).
+
+    The solve at step k samples t = (k+1) dt; the first sample after the
+    last out-of-band one is the measured settling instant. A waveform
+    that never leaves the band settles at the first sample (dt); one
+    still out of band at the horizon reports the horizon itself.
+    """
+    dt = jnp.asarray(dt)
+    return jnp.minimum((last_oob.astype(dt.dtype) + 2.0) * dt, n_steps * dt)

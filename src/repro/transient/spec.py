@@ -1,0 +1,109 @@
+"""Declarative specification of a batched transient co-simulation.
+
+A `TransientSpec` names everything the time-domain engine needs: the
+integration horizon and fixed-step count, the implicit method (backward
+Euler or trapezoidal), the PWL input ramp, the settling tolerance band,
+the adaptive-refinement schedule, the per-step Gauss–Seidel budget and
+the periphery capacitances that join `Interconnect.c_segment` in the
+node-capacitance assembly.
+
+The spec is a frozen, hashable dataclass so it can ride on
+`IMACConfig.transient`, participate in `structure_key` grouping (its
+static fields shape the traced scan), be swept as a `SweepSpec` axis and
+be fingerprinted by the on-disk result cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+METHODS = ("be", "trap")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransientSpec:
+    """One waveform-accurate transient analysis of the mapped circuit.
+
+    Attributes:
+      t_stop: integration horizon per layer (seconds). Output waveforms
+        that have not entered the settling band by `t_stop` report
+        `t_stop` as their settling time (finite by construction).
+      n_steps: fixed number of implicit time steps per integration pass
+        (static: it is the scan length of the jitted integrator).
+      method: 'be' (backward Euler, L-stable, 1st order) or 'trap'
+        (trapezoidal companion model, A-stable, 2nd order — SPICE's
+        default).
+      t_rise: input PWL ramp 0 -> v_in over [0, t_rise]. 0.0 means
+        "one coarse step" (t_stop / n_steps), which keeps the drive
+        consistent with the initial condition v(0) = 0 and is what the
+        generated netlist's PWL sources state.
+      rtol / atol: settling band around the steady-state output node
+        voltage v_ss: a node is in band when
+        |v(t) - v_ss| <= rtol * max|v_ss| + atol (volts).
+      refine_passes: adaptive refinement rounds. After each pass the
+        window [0, max settling time + refine_margin steps] is re-run
+        with the same n_steps, shrinking dt wherever settling happens
+        well before t_stop — one extra stacked integration per pass, no
+        per-config loops.
+      refine_margin: coarse steps of slack added to the refinement
+        window.
+      gs_iters: Gauss–Seidel sweeps per time step. The capacitor
+        companion conductance C/dt stiffens the diagonal and each step
+        warm-starts from the previous one, so far fewer sweeps than a
+        cold DC solve are needed.
+      c_driver: row driver output capacitance (farads), added to the
+        row-head node.
+      c_tia: TIA input capacitance (farads), added to the column-foot
+        node.
+      n_probe: evaluation samples used to drive the transient (the
+        waveform question is per-design, not per-sample; a handful of
+        probe inputs bounds the cost). Settling is the worst case over
+        probes, energy the mean.
+
+    Waveform recording is a call-site choice, not a spec field — pass
+    ``record=True`` to `run_transient`/`layer_transient` to keep the
+    final-pass waveforms.
+    """
+
+    t_stop: float = 20e-9
+    n_steps: int = 128
+    method: str = "trap"
+    t_rise: float = 0.0
+    rtol: float = 0.02
+    atol: float = 1e-6
+    refine_passes: int = 1
+    refine_margin: int = 2
+    gs_iters: int = 8
+    c_driver: float = 1e-15
+    c_tia: float = 2e-15
+    n_probe: int = 2
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(
+                f"unknown method {self.method!r}; choose from {METHODS}"
+            )
+        if self.t_stop <= 0.0:
+            raise ValueError(f"t_stop must be positive, got {self.t_stop}")
+        if self.t_rise > self.t_stop:
+            raise ValueError(
+                f"t_rise ({self.t_rise}) must not exceed t_stop "
+                f"({self.t_stop}): the drive must reach its target within "
+                f"the horizon (and the netlist PWL must stay monotone)"
+            )
+        if self.n_steps < 2:
+            raise ValueError(f"need at least 2 steps, got {self.n_steps}")
+        if self.refine_passes < 0:
+            raise ValueError(f"refine_passes must be >= 0, got {self.refine_passes}")
+        if self.gs_iters < 1:
+            raise ValueError(f"gs_iters must be >= 1, got {self.gs_iters}")
+        if self.n_probe < 1:
+            raise ValueError(f"n_probe must be >= 1, got {self.n_probe}")
+
+    @property
+    def dt(self) -> float:
+        """Coarse (first-pass) step size in seconds."""
+        return self.t_stop / self.n_steps
+
+    def resolved_t_rise(self) -> float:
+        """The input ramp time actually integrated (0 -> one coarse step)."""
+        return self.t_rise if self.t_rise > 0.0 else self.dt

@@ -44,7 +44,10 @@ class ReliabilityReport(NamedTuple):
     yield_frac: float         # P(accuracy >= acc_threshold)
     power_mean: float         # W, mean over trials of per-trial avg power
     power_worst: float        # W, worst trial
-    latency: float            # s, structural (identical across trials)
+    latency: float            # s, trial mean (analytic latency is
+                              # structural and identical across trials;
+                              # waveform-measured latency varies with the
+                              # trial's drawn conductances)
     digital_accuracy: float   # float-model reference
     worst_residual: float     # worst solver residual across trials
     n_samples: int
@@ -52,6 +55,14 @@ class ReliabilityReport(NamedTuple):
     per_trial_power: tuple
     hp: tuple
     vp: tuple
+    # Waveform-derived distribution (repro.transient): when the design
+    # point carries a TransientSpec every trial integrates its own
+    # transient, so latency and energy become per-trial quantities.
+    latency_worst: float = 0.0   # s, slowest trial
+    energy_mean: float = 0.0     # J, mean energy per inference
+    energy_worst: float = 0.0    # J, worst trial
+    per_trial_latency: tuple = ()
+    per_trial_energy: tuple = ()
 
     # IMACResult-compatible aliases: point-result consumers (default
     # Pareto objectives, report tables) read the trial means.
@@ -78,6 +89,8 @@ def summarize(
         raise ValueError("need at least one trial result to summarize")
     accs = np.array([r.accuracy for r in results], dtype=float)
     powers = np.array([r.avg_power for r in results], dtype=float)
+    latencies = np.array([r.latency for r in results], dtype=float)
+    energies = np.array([r.energy for r in results], dtype=float)
     q = {
         name: float(np.quantile(accs, frac)) for name, frac in ACC_QUANTILES
     }
@@ -96,7 +109,7 @@ def summarize(
         yield_frac=float(np.mean(accs >= acc_threshold)),
         power_mean=float(powers.mean()),
         power_worst=float(powers.max()),
-        latency=results[0].latency,
+        latency=float(latencies.mean()),
         digital_accuracy=results[0].digital_accuracy,
         worst_residual=float(max(r.worst_residual for r in results)),
         n_samples=results[0].n_samples,
@@ -104,4 +117,9 @@ def summarize(
         per_trial_power=tuple(float(p) for p in powers),
         hp=tuple(results[0].hp),
         vp=tuple(results[0].vp),
+        latency_worst=float(latencies.max()),
+        energy_mean=float(energies.mean()),
+        energy_worst=float(energies.max()),
+        per_trial_latency=tuple(float(v) for v in latencies),
+        per_trial_energy=tuple(float(v) for v in energies),
     )
