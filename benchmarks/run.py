@@ -1,6 +1,8 @@
 """Benchmark harness: one function per paper table + system benches.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit)
+and, per selected bench, writes the same rows plus run metadata to
+``BENCH_<name>.json`` in the repo root (machine-readable trend input).
 
   table3      — paper Table III (partitioning design space)
   table4      — paper Table IV (device technologies)
@@ -18,8 +20,31 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--only table3,table4,...]
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _write_json(name: str, rows, ok: bool) -> None:
+    """Snapshot one bench's emitted rows as BENCH_<name>.json."""
+    import jax
+
+    payload = {
+        "bench": name,
+        "ok": ok,
+        "jax_backend": jax.default_backend(),
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": derived}
+            for n, us, derived in rows
+        ],
+    }
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
 
 
 def main() -> None:
@@ -53,14 +78,19 @@ def main() -> None:
     selected = (
         [s.strip() for s in args.only.split(",")] if args.only else list(benches)
     )
+    from benchmarks import common
+
     print("name,us_per_call,derived")
     failures = []
     for name in selected:
+        start = len(common.CSV_ROWS)
         try:
             benches[name]()
+            _write_json(name, common.CSV_ROWS[start:], ok=True)
         except Exception as e:  # keep the harness going; report at exit
             traceback.print_exc()
             failures.append((name, repr(e)))
+            _write_json(name, common.CSV_ROWS[start:], ok=False)
     if failures:
         print(f"FAILED benches: {failures}", file=sys.stderr)
         raise SystemExit(1)

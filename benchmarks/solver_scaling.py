@@ -2,25 +2,40 @@
 
 The adapted engine's value proposition: one SPICE-style DC solve per
 (tile x sample) batched on accelerator-friendly primitives. Reports
-us/solve across array sizes and the dense-MNA crossover.
+us/solve across array sizes and the dense-MNA crossover, then times the
+paper's batched-tiles workload once per registered solver backend
+("scan" / "pallas" / "fused") and — on a real TPU only — asserts the
+fused kernel's >= 3x speedup over the scan baseline. Off-TPU the Pallas
+backends run in interpret mode, whose timings are meaningless, so the
+kernel rows are skipped (never faked) unless BENCH_SOLVER_TINY=1
+shrinks the workload enough for an interpret-mode correctness pass.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.core.backends import on_tpu
 from repro.core.devices import MRAM
 from repro.core.solver import (
     CircuitParams,
+    SolveOptions,
     solve_crossbar,
     solve_dense_mna,
     suggest_iters,
 )
 
+FUSED_MIN_SPEEDUP = 3.0
+
 
 def run():
+    tiny = os.environ.get("BENCH_SOLVER_TINY", "") == "1"
     key = jax.random.PRNGKey(0)
-    for size in (16, 32, 64, 128, 256, 512):
+    sizes = (8, 16) if tiny else (16, 32, 64, 128, 256, 512)
+    for size in sizes:
         g = jax.random.uniform(
             key, (size, size), minval=MRAM.g_off, maxval=MRAM.g_on
         )
@@ -34,11 +49,60 @@ def run():
             us_mna, _ = time_call(fn_mna, g, v)
             emit(f"solver/mna_{size}x{size}", us_mna, "oracle")
 
-    # Batched throughput: the paper's workload shape (52 tiles x batch).
-    g = jax.random.uniform(key, (104, 32, 32), minval=MRAM.g_off, maxval=MRAM.g_on)
-    v = jax.random.uniform(jax.random.PRNGKey(2), (64, 104, 32), maxval=0.8)
-    cp = CircuitParams(gs_iters=suggest_iters(32, 32))
-    fn = jax.jit(lambda g, v: solve_crossbar(g[None], v, cp).i_out)
-    us, out = time_call(fn, g, v)
-    n_solves = 64 * 104
-    emit("solver/batched_tiles", us / n_solves, f"solves={n_solves};us_total={us:.0f}")
+    # Batched throughput: the paper's workload shape (52 tiles x batch),
+    # timed once per solver backend.
+    if tiny:
+        tiles, size, batch = 4, 8, 2
+    else:
+        tiles, size, batch = 104, 32, 64
+    g = jax.random.uniform(
+        key, (tiles, size, size), minval=MRAM.g_off, maxval=MRAM.g_on
+    )
+    v = jax.random.uniform(
+        jax.random.PRNGKey(2), (batch, tiles, size), maxval=0.8
+    )
+    cp = CircuitParams(gs_iters=suggest_iters(size, size))
+    n_solves = batch * tiles
+
+    # Interpret-mode Pallas timings are not representative: off-TPU the
+    # kernel backends only run in tiny mode (as a correctness pass).
+    kernel_backends_run = on_tpu() or tiny
+    backends = ("scan", "pallas", "fused") if kernel_backends_run else ("scan",)
+    per_backend_us = {}
+    ref_out = None
+    for backend in backends:
+        opts = SolveOptions(backend=backend)
+        fn = jax.jit(
+            lambda g, v, o=opts: solve_crossbar(g[None], v, cp, options=o).i_out
+        )
+        us, out = time_call(fn, g, v)
+        per_backend_us[backend] = us
+        emit(
+            f"solver/batched_tiles[{backend}]",
+            us / n_solves,
+            f"solves={n_solves};us_total={us:.0f}",
+        )
+        if ref_out is None:
+            ref_out = out
+        else:
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(ref_out), rtol=5e-4, atol=1e-9
+            )
+
+    if on_tpu():
+        speedup = per_backend_us["scan"] / per_backend_us["fused"]
+        emit(
+            "solver/fused_speedup",
+            speedup,
+            f"target>={FUSED_MIN_SPEEDUP}x(scan/fused)",
+        )
+        assert speedup >= FUSED_MIN_SPEEDUP, (
+            f"fused backend speedup {speedup:.2f}x over scan is below the "
+            f"{FUSED_MIN_SPEEDUP}x target on the batched_tiles workload"
+        )
+    else:
+        emit(
+            "solver/fused_speedup",
+            0.0,
+            "skipped=no-TPU(interpret-mode timings not representative)",
+        )

@@ -6,6 +6,8 @@ Public API:
   mapping.map_wb / map_network          (Module 2: mapWB)
   partition.auto_partition / plan_partition / tile_matrix
   solver.solve_crossbar / solve_dense_mna (the "SPICE engine")
+  solver.Stamps / SolveOptions           (stamp pytree + backend choice)
+  backends.register_backend / available_backends / get_backend
   neurons.NeuronModel
   imac.IMACConfig / IMACNetwork / imac_linear (Modules 3-4)
   netlist.map_layer / map_imac          (SPICE netlist generation)
@@ -45,8 +47,17 @@ from repro.core.netlist import (
 )
 from repro.core.neurons import NeuronModel, get_neuron
 from repro.core.partition import PartitionPlan, auto_partition, plan_partition
+from repro.core.backends import (
+    SolverBackend,
+    available_backends,
+    default_backend_name,
+    get_backend,
+    register_backend,
+)
 from repro.core.solver import (
     CircuitParams,
+    SolveOptions,
+    Stamps,
     crossbar_power,
     solve_crossbar,
     solve_dense_mna,
@@ -68,11 +79,17 @@ __all__ = [
     "PCM",
     "PartitionPlan",
     "RRAM",
+    "SolveOptions",
+    "SolverBackend",
+    "Stamps",
     "TECHNOLOGIES",
     "auto_partition",
+    "available_backends",
     "crossbar_power",
     "custom_tech",
+    "default_backend_name",
     "evaluate_batch",
+    "get_backend",
     "get_neuron",
     "get_tech",
     "imac_linear",
@@ -84,6 +101,7 @@ __all__ = [
     "netlist_stats",
     "parse_transient_directives",
     "plan_partition",
+    "register_backend",
     "TransientStats",
     "solve_crossbar",
     "solve_dense_mna",

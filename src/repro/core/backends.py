@@ -1,0 +1,178 @@
+"""Named solver-backend registry for the crossbar circuit solve.
+
+The block Gauss–Seidel solve in `repro.core.solver` has two pluggable
+levels:
+
+  * the *inner* batched tridiagonal (Thomas) solve — one call per
+    half-sweep, materializing the half-sweep voltages between calls
+    (`"scan"` = pure lax.scan, `"pallas"` = the Pallas Thomas tile in
+    `repro.kernels.tridiag`);
+  * the *whole sweep loop* — one fused Pallas kernel that keeps a lane
+    block of systems resident in VMEM and iterates
+    row-tridiag → transpose → col-tridiag → SOR → residual on-chip
+    (`"fused"` = `repro.kernels.gs_fused`), never touching HBM between
+    half-sweeps.
+
+Backends are selected by name through `solver.SolveOptions` (or the
+``REPRO_SOLVER_BACKEND`` environment variable for a process-wide
+default); custom inner solvers register with `register_backend` or are
+passed directly as a callable. Off-TPU, Pallas-backed entries fall back
+to interpret mode automatically with a single logged notice, so CI and
+CPU differential tests exercise the exact kernel code paths.
+
+This module deliberately imports the kernel packages lazily: importing
+`repro.core.solver` must stay cheap and cycle-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+from typing import Callable, Optional
+
+import jax
+
+logger = logging.getLogger(__name__)
+
+ENV_BACKEND = "REPRO_SOLVER_BACKEND"
+
+#: Batched tridiagonal solve along the last axis: (dl, d, du, b) -> x,
+#: with dl[..., 0] and du[..., -1] ignored.
+TridiagFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverBackend:
+    """One registered way to run the crossbar solve.
+
+    Exactly one of the two factories is set:
+
+    Attributes:
+      name: registry key (reported in logs and benchmarks).
+      make_tridiag: factory returning the inner TridiagFn used by the
+        generic sweep loop in `solver.solve_crossbar`. Receives the
+        resolved `SolveOptions` (for e.g. the interpret flag).
+      make_solve: factory returning a *full-solve* function
+        ``(g, v_in, cp, stamps) -> CrossbarSolution`` that replaces the
+        sweep loop entirely (the fused kernel).
+    """
+
+    name: str
+    make_tridiag: Optional[Callable] = None
+    make_solve: Optional[Callable] = None
+
+
+_REGISTRY: "dict[str, SolverBackend]" = {}
+
+
+def register_backend(backend: SolverBackend) -> SolverBackend:
+    """Register (or replace) a named solver backend."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> "tuple[str, ...]":
+    return tuple(sorted(_REGISTRY))
+
+
+def default_backend_name() -> str:
+    """Process-wide default backend: $REPRO_SOLVER_BACKEND or 'scan'."""
+    return os.environ.get(ENV_BACKEND, "scan")
+
+
+def get_backend(spec) -> SolverBackend:
+    """Resolve a backend spec: name, SolverBackend, TridiagFn, or None.
+
+    None resolves to `default_backend_name()`. A bare callable is
+    wrapped as an anonymous inner-tridiag backend (the supported form of
+    the old raw ``tridiag=`` argument).
+    """
+    if spec is None:
+        spec = default_backend_name()
+    if isinstance(spec, SolverBackend):
+        return spec
+    if callable(spec):
+        fn = spec
+        return SolverBackend(
+            name=getattr(fn, "__name__", "custom"),
+            make_tridiag=lambda options: fn,
+        )
+    try:
+        return _REGISTRY[spec]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver backend {spec!r}; available: "
+            f"{', '.join(available_backends())}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Interpret-mode resolution (Pallas off-TPU fallback).
+# ---------------------------------------------------------------------------
+
+_interpret_notice_emitted = False
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: "bool | None") -> bool:
+    """Resolve a Pallas interpret flag; None = auto (interpret off-TPU).
+
+    The automatic fallback logs a single per-process notice so CPU runs
+    make clear they exercise the kernel in interpret mode (numerically
+    identical, not representative of TPU speed).
+    """
+    global _interpret_notice_emitted
+    if interpret is not None:
+        return interpret
+    if on_tpu():
+        return False
+    if not _interpret_notice_emitted:
+        _interpret_notice_emitted = True
+        logger.warning(
+            "Pallas solver backend: no TPU detected (jax backend=%s); "
+            "running kernels in interpret mode. Results are identical "
+            "but timings are not representative.",
+            jax.default_backend(),
+        )
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends. Kernel imports are lazy (inside the factories).
+# ---------------------------------------------------------------------------
+
+
+def _make_scan_tridiag(options):
+    from repro.core.solver import tridiag_scan
+
+    return tridiag_scan
+
+
+def _make_pallas_tridiag(options):
+    from repro.kernels.tridiag.ops import tridiag
+
+    interpret = resolve_interpret(getattr(options, "interpret", None))
+
+    def pallas_tridiag(dl, d, du, b):
+        return tridiag(dl, d, du, b, interpret=interpret)
+
+    return pallas_tridiag
+
+
+def _make_fused_solve(options):
+    from repro.kernels.gs_fused.ops import fused_solve
+
+    interpret = resolve_interpret(getattr(options, "interpret", None))
+
+    def solve(g, v_in, cp, stamps):
+        return fused_solve(g, v_in, cp, stamps, interpret=interpret)
+
+    return solve
+
+
+register_backend(SolverBackend(name="scan", make_tridiag=_make_scan_tridiag))
+register_backend(SolverBackend(name="pallas", make_tridiag=_make_pallas_tridiag))
+register_backend(SolverBackend(name="fused", make_solve=_make_fused_solve))

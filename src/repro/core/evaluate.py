@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core.digital import Params, mlp_forward
 from repro.core.imac import IMACConfig, build_plans, layer_latency, linear_forward
 from repro.core.mapping import MappedLayer, map_network
-from repro.core.solver import CircuitParams, suggest_iters
+from repro.core.solver import CircuitParams, SolveOptions, suggest_iters
 
 
 class IMACResult(NamedTuple):
@@ -214,6 +214,7 @@ def evaluate_batch(
     activation: str = "sigmoid",
     mapped: Optional[list] = None,
     mapped_stacked: Optional[list] = None,
+    solve_options: Optional[SolveOptions] = None,
 ) -> "list[IMACResult]":
     """Evaluate many structurally-compatible IMAC configurations at once.
 
@@ -257,6 +258,9 @@ def evaluate_batch(
         the Monte-Carlo engine samples its trials directly in this form
         (see repro.variability) so trial tensors are never materialized
         twice. Mutually exclusive with `mapped`.
+      solve_options: circuit-solver backend selection
+        (`core.solver.SolveOptions`); None = the process default
+        ($REPRO_SOLVER_BACKEND, else "scan").
 
     Returns:
       One IMACResult per configuration, in input order.
@@ -352,7 +356,7 @@ def evaluate_batch(
         transient_res = network_transient_stacked(
             g_pos, g_neg, k, tr_scal, plans, neuron, tspec,
             jnp.asarray(x[: tspec.n_probe], dtype), v_unit, iters, tol,
-            dtype=dtype,
+            dtype=dtype, solve_options=solve_options,
         )
 
     def forward_all(gp, gn, kk, sc, xb, nkey):
@@ -391,6 +395,7 @@ def evaluate_batch(
                 a,
                 parasitics=parasitics,
                 is_output=(layer == n_layers - 1),
+                solve_options=solve_options,
                 noise_key=keys[layer],
                 read_noise_rel=sc["read_noise"],
                 noise_per_config=noise_per_config,

@@ -37,12 +37,11 @@ from repro.core.partition import (
 )
 from repro.core.solver import (
     CircuitParams,
-    TridiagFn,
+    SolveOptions,
     _align as _align_leading,
     crossbar_power,
     solve_crossbar,
     suggest_iters,
-    tridiag_scan,
 )
 
 
@@ -161,7 +160,7 @@ def linear_forward(
     *,
     parasitics: bool = True,
     is_output: bool = False,
-    tridiag: TridiagFn = tridiag_scan,
+    solve_options: Optional[SolveOptions] = None,
     noise_key: Optional[jax.Array] = None,
     read_noise_rel: "jax.Array | float" = 0.0,
     noise_per_config: bool = False,
@@ -205,7 +204,7 @@ def linear_forward(
         v_all = jnp.concatenate([v_per_tile, v_per_tile], axis=-2)  # (..., b, 2T, M)
         # Insert the sample axis into g: (..., 1, 2T, M, N) vs (..., b, 2T, M).
         g_b = g_all[..., None, :, :, :]
-        sol = solve_crossbar(g_b, v_all, cp, tridiag=tridiag)
+        sol = solve_crossbar(g_b, v_all, cp, options=solve_options)
         t = plan.n_tiles
         i_pos = combine_outputs(sol.i_out[..., :t, :], plan)
         i_neg = combine_outputs(sol.i_out[..., t:, :], plan)
@@ -254,7 +253,7 @@ def imac_linear(
     cfg: IMACConfig,
     *,
     is_output: bool = False,
-    tridiag: TridiagFn = tridiag_scan,
+    solve_options: Optional[SolveOptions] = None,
     noise_key: Optional[jax.Array] = None,
 ) -> IMACLayerOutput:
     """One analog layer: crossbar solve + diff amp + neuron.
@@ -265,7 +264,7 @@ def imac_linear(
       a: (batch, fan_in) activations in digital units.
       cfg: circuit hyperparameters.
       is_output: last layer — linear readout (no neuron nonlinearity).
-      tridiag: pluggable tridiagonal solver.
+      solve_options: solver backend selection (None = process default).
       noise_key: optional key for read noise on the output currents.
 
     Returns:
@@ -287,7 +286,7 @@ def imac_linear(
         a,
         parasitics=cfg.parasitics,
         is_output=is_output,
-        tridiag=tridiag,
+        solve_options=solve_options,
         noise_key=noise_key,
         read_noise_rel=tech.read_noise_rel,
         dtype=dtype,
@@ -339,7 +338,7 @@ class IMACNetwork:
         self,
         x: jax.Array,
         *,
-        tridiag: TridiagFn = tridiag_scan,
+        solve_options: Optional[SolveOptions] = None,
         noise_key: Optional[jax.Array] = None,
     ) -> "tuple[jax.Array, list[LayerStats]]":
         """Simulate the full IMAC circuit for a batch of inputs.
@@ -365,7 +364,7 @@ class IMACNetwork:
                 a,
                 self.cfg,
                 is_output=(idx == n - 1),
-                tridiag=tridiag,
+                solve_options=solve_options,
                 noise_key=keys[idx],
             )
             a = out.activations

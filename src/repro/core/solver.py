@@ -18,16 +18,36 @@ is one-netlist-at-a-time.
 `solve_dense_mna` is the small-array oracle (full MNA matrix +
 jnp.linalg.solve) used by tests and by the SPICE-netlist round-trip.
 
-The tridiagonal inner solve is pluggable: `tridiag_scan` (lax.scan
-reference) or the Pallas kernel in repro.kernels.tridiag.
+The solve itself is pluggable through the named backend registry in
+`repro.core.backends` (selected via `SolveOptions` or the
+``REPRO_SOLVER_BACKEND`` env var):
+
+  * ``"scan"``  — lax.scan Thomas inner solve (reference, default);
+  * ``"pallas"`` — Pallas Thomas tile per half-sweep
+    (`repro.kernels.tridiag`);
+  * ``"fused"`` — one Pallas kernel runs the *entire* sweep loop in
+    VMEM (`repro.kernels.gs_fused`);
+  * any `TridiagFn` callable — a custom inner solve.
+
+Companion-model stamps (node-capacitor conductances / history currents
+of a transient step, warm-start voltages) enter through the frozen
+`Stamps` pytree rather than loose kwargs; the old per-field kwargs are
+accepted for one release behind a DeprecationWarning.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+import warnings
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.backends import (
+    SolverBackend,
+    TridiagFn,
+    get_backend,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +98,66 @@ class CrossbarSolution(NamedTuple):
     residual: jax.Array  # scalar-ish (...) final GS update magnitude
 
 
-TridiagFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Stamps:
+    """Companion-model stamps added to the crossbar MNA assembly.
+
+    A frozen dataclass registered as a JAX pytree — it crosses jit
+    boundaries and lax control flow like any array container. All fields
+    are optional (None = absent) and, when present, broadcast against
+    the solve's ``(..., M, N)`` batch:
+
+    Attributes:
+      g_shunt_row: per-node extra conductance to ground on row-wire
+        nodes — e.g. C/dt (BE) or 2C/dt (trapezoidal) of a node
+        capacitor in an implicit transient step.
+      g_shunt_col: same, on column-wire nodes.
+      i_inj_row: per-node current injection into row-wire nodes — the
+        companion history source of the discretized capacitor.
+      i_inj_col: same, into column-wire nodes.
+      v_init: initial column-node voltages — warm-starts the
+        Gauss–Seidel iteration (the previous time step's solution),
+        which is what makes few sweeps per transient step sufficient.
+    """
+
+    g_shunt_row: Optional[jax.Array] = None
+    g_shunt_col: Optional[jax.Array] = None
+    i_inj_row: Optional[jax.Array] = None
+    i_inj_col: Optional[jax.Array] = None
+    v_init: Optional[jax.Array] = None
+
+    def fields(self) -> "tuple[Optional[jax.Array], ...]":
+        return (
+            self.g_shunt_row,
+            self.g_shunt_col,
+            self.i_inj_row,
+            self.i_inj_col,
+            self.v_init,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveOptions:
+    """Static solver configuration (how to run, not what to solve).
+
+    Attributes:
+      backend: a registry name (``"scan"``, ``"pallas"``, ``"fused"``),
+        a `repro.core.backends.SolverBackend`, a bare `TridiagFn`
+        callable (custom inner solve), or None for the process default
+        (``$REPRO_SOLVER_BACKEND``, else ``"scan"``).
+      interpret: force Pallas interpret mode on/off; None = automatic
+        (interpret off-TPU, with a single logged notice).
+    """
+
+    backend: Union[str, SolverBackend, TridiagFn, None] = None
+    interpret: Optional[bool] = None
+
+    def resolved(self) -> SolverBackend:
+        return get_backend(self.backend)
+
+
+DEFAULT_OPTIONS = SolveOptions()
 
 
 def tridiag_scan(dl: jax.Array, d: jax.Array, du: jax.Array, b: jax.Array) -> jax.Array:
@@ -220,12 +299,60 @@ def _col_system(
     return dl, d, du, b
 
 
+def _merge_deprecated(
+    tridiag,
+    stamps: Optional[Stamps],
+    options: Optional[SolveOptions],
+    legacy: dict,
+) -> "tuple[Optional[Stamps], SolveOptions]":
+    """One-release deprecation shim: warn and forward the old kwargs.
+
+    The pre-registry API passed companion stamps as five loose kwargs
+    and the inner solve as a raw ``tridiag=`` callable. Both still work
+    (covered by tests/test_backends.py) but emit a DeprecationWarning;
+    mixing old and new spellings of the same thing is an error.
+    """
+    used = {k: v for k, v in legacy.items() if v is not None}
+    if used:
+        if stamps is not None:
+            raise ValueError(
+                f"pass companion stamps either as Stamps or as the "
+                f"deprecated kwargs {sorted(used)}, not both"
+            )
+        warnings.warn(
+            f"solve_crossbar kwargs {sorted(used)} are deprecated; pass "
+            "stamps=Stamps(...) instead (one-release shim)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        stamps = Stamps(**used)
+    if tridiag is not None:
+        if options is not None and options.backend is not None:
+            raise ValueError(
+                "pass the solver either as options=SolveOptions(backend=...) "
+                "or as the deprecated tridiag= callable, not both"
+            )
+        warnings.warn(
+            "solve_crossbar's tridiag= argument is deprecated; pass "
+            "options=SolveOptions(backend=<name or TridiagFn>) instead "
+            "(one-release shim)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        options = dataclasses.replace(
+            options or DEFAULT_OPTIONS, backend=tridiag
+        )
+    return stamps, options or DEFAULT_OPTIONS
+
+
 def solve_crossbar(
     g: jax.Array,
     v_in: jax.Array,
     cp: CircuitParams,
-    tridiag: TridiagFn = tridiag_scan,
+    tridiag: Optional[TridiagFn] = None,
     *,
+    stamps: Optional[Stamps] = None,
+    options: Optional[SolveOptions] = None,
     g_shunt_row: "jax.Array | None" = None,
     g_shunt_col: "jax.Array | None" = None,
     i_inj_row: "jax.Array | None" = None,
@@ -240,28 +367,67 @@ def solve_crossbar(
     solve (and one compilation) with a single while_loop; `gs_iters` and
     `tol` stay static.
 
-    With the optional companion-model stamps this same assembly solves
-    one implicit time step of the parasitic-RC network: a node capacitor
-    C discretized by backward-Euler/trapezoidal becomes a conductance to
-    ground (`g_shunt_*`, C/dt or 2C/dt) plus a history current source
-    (`i_inj_*`) — see repro.transient.integrator. `v_init` warm-starts
-    the Gauss–Seidel iteration (the previous time step's column
-    voltages), which is what makes few sweeps per step sufficient.
+    With optional companion-model stamps (`stamps`) this same assembly
+    solves one implicit time step of the parasitic-RC network: a node
+    capacitor C discretized by backward-Euler/trapezoidal becomes a
+    conductance to ground (`Stamps.g_shunt_*`, C/dt or 2C/dt) plus a
+    history current source (`Stamps.i_inj_*`) — see
+    repro.transient.integrator. `Stamps.v_init` warm-starts the
+    Gauss–Seidel iteration (the previous time step's column voltages),
+    which is what makes few sweeps per step sufficient.
+
+    How the solve runs is chosen by `options` (see `SolveOptions` and
+    repro.core.backends): the ``"scan"`` and ``"pallas"`` backends drive
+    the sweep loop here with a batched inner tridiagonal solve; the
+    ``"fused"`` backend hands the whole loop to one Pallas kernel that
+    keeps the systems resident in VMEM across sweeps. The fused backend
+    runs the full `gs_iters` budget (no `tol` early exit — on-chip
+    sweeps are cheap); `tol` still applies to the other backends.
 
     Args:
       g: (..., M, N) memristor conductances (S). 0 = absent device.
       v_in: (..., M) driver voltages behind r_source.
       cp: circuit parameters.
-      tridiag: batched tridiagonal solver (pluggable Pallas kernel).
-      g_shunt_row / g_shunt_col: optional (..., M, N) per-node extra
-        conductance to ground on row / column wire nodes.
-      i_inj_row / i_inj_col: optional (..., M, N) per-node current
-        injection into row / column wire nodes.
-      v_init: optional (..., M, N) initial column-node voltages.
+      tridiag: DEPRECATED — raw inner-solve callable; use
+        ``options=SolveOptions(backend=...)``.
+      stamps: optional companion-model stamps / warm start.
+      options: backend selection and Pallas interpret override.
+      g_shunt_row / g_shunt_col / i_inj_row / i_inj_col / v_init:
+        DEPRECATED loose spellings of the `Stamps` fields (one-release
+        shim; warns and forwards).
 
     Returns:
       CrossbarSolution; i_out[..., j] = current into column j's TIA.
     """
+    stamps, options = _merge_deprecated(
+        tridiag,
+        stamps,
+        options,
+        dict(
+            g_shunt_row=g_shunt_row,
+            g_shunt_col=g_shunt_col,
+            i_inj_row=i_inj_row,
+            i_inj_col=i_inj_col,
+            v_init=v_init,
+        ),
+    )
+    backend = options.resolved()
+    if backend.make_solve is not None:
+        return backend.make_solve(options)(g, v_in, cp, stamps)
+    return _sweep_solve(g, v_in, cp, backend.make_tridiag(options), stamps)
+
+
+def _sweep_solve(
+    g: jax.Array,
+    v_in: jax.Array,
+    cp: CircuitParams,
+    tridiag: TridiagFn,
+    stamps: Optional[Stamps],
+) -> CrossbarSolution:
+    """The generic sweep loop: batched inner tridiag + SOR in jnp."""
+    st = stamps or Stamps()
+    g_shunt_row, g_shunt_col = st.g_shunt_row, st.g_shunt_col
+    i_inj_row, i_inj_col, v_init = st.i_inj_row, st.i_inj_col, st.v_init
     g = jnp.asarray(g)
     v_in = jnp.asarray(v_in)
     m, n = g.shape[-2], g.shape[-1]

@@ -6,6 +6,9 @@
                      ideal-analog fast path / AnalogLinear backend).
   decode_attention — flash-decoding (online softmax over KV blocks) for
                      long-context serving shapes.
+  gs_fused         — the *entire* Gauss–Seidel sweep loop fused in one
+                     kernel (lane block of systems resident in VMEM);
+                     the "fused" entry of the solver backend registry.
 
 Each kernel directory has kernel.py (pl.pallas_call + BlockSpec),
 ops.py (jit'd public wrapper choosing interpret mode off-TPU) and
@@ -14,3 +17,4 @@ ref.py (pure-jnp oracle used by the tests).
 from repro.kernels.tridiag.ops import tridiag  # noqa: F401
 from repro.kernels.imac_mvm.ops import imac_mvm  # noqa: F401
 from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.gs_fused.ops import fused_lane_block, fused_solve  # noqa: F401

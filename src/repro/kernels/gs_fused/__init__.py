@@ -1,0 +1,1 @@
+from repro.kernels.gs_fused.ops import fused_lane_block, fused_solve  # noqa: F401

@@ -1,0 +1,253 @@
+"""Host-side wrapper of the fused Gauss–Seidel sweep kernel.
+
+`fused_solve` is the ``"fused"`` entry of the solver-backend registry
+(repro.core.backends): it assembles the sweep-invariant tridiagonal
+coefficients of the segment-RC MNA structure — including companion-model
+stamps from a `Stamps` pytree — precomputes the Thomas forward
+multipliers and inverse denominators once per solve, flattens every
+leading batch axis (configs × trials × samples × tiles) into the
+kernel's lane-block axis, and returns the same `CrossbarSolution` the
+generic sweep loop produces.
+
+Off-TPU the kernel runs in interpret mode (the caller resolves the flag
+via repro.core.backends.resolve_interpret); tiles too large for VMEM
+residency fall back to the per-half-sweep ``"pallas"`` backend with a
+single logged notice.
+"""
+from __future__ import annotations
+
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gs_fused.kernel import gs_fused_nb
+
+logger = logging.getLogger(__name__)
+
+#: Conservative per-lane-block buffer counts used for VMEM sizing:
+#: 12 buffers in (M, N) layout (inputs, outputs, scratch, carry) plus
+#: 5 in the transposed (N, M) layout (see kernel.py's docstring).
+_BUFS_MN = 12
+_BUFS_NM = 5
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+_fallback_notice_emitted = False
+
+
+def _pad8(x: int) -> int:
+    return -(-x // 8) * 8
+
+
+def _pad128(x: int) -> int:
+    return -(-x // 128) * 128
+
+
+def fused_lane_block(
+    m: int,
+    n: int,
+    dtype=jnp.float32,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+) -> int:
+    """Lane-block size LB the fused kernel can keep resident in VMEM.
+
+    The VMEM cost per batched system is ``itemsize × (12 × pad8(M) ×
+    pad128(N) + 5 × pad8(N) × pad128(M))`` (Mosaic pads the minor axis
+    to 128 lanes and the second-minor to 8 sublanes for f32). Returns 0
+    when even one system does not fit — callers must then fall back to
+    the per-half-sweep ``"pallas"`` backend.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    per_system = itemsize * (
+        _BUFS_MN * _pad8(m) * _pad128(n) + _BUFS_NM * _pad8(n) * _pad128(m)
+    )
+    return min(budget_bytes // per_system, 256)
+
+
+def _thomas_coeffs(d: jax.Array, off) -> "tuple[jax.Array, jax.Array]":
+    """Sweep-invariant Thomas forward coefficients along the last axis.
+
+    For systems with constant off-diagonals ``off`` (dl = du = off;
+    dl[..., 0] / du[..., -1] unused) and diagonal ``d``, returns
+    ``(cp, inv_den)`` such that the forward elimination reduces to
+    ``dp_j = (b_j - off * dp_{j-1}) * inv_den_j`` and back-substitution
+    to ``x_j = dp_j - cp_j * x_{j+1}`` — no divisions left in the sweep
+    loop.
+    """
+    off_b = jnp.broadcast_to(off, d.shape)
+    d_t = jnp.moveaxis(d, -1, 0)
+    du_t = jnp.moveaxis(off_b, -1, 0)
+    dl_t = du_t.at[0].set(0.0)
+
+    def step(cp_prev, row):
+        d_j, dl_j, du_j = row
+        inv = 1.0 / (d_j - dl_j * cp_prev)
+        cp_j = du_j * inv
+        return cp_j, (cp_j, inv)
+
+    _, (cpv, inv) = jax.lax.scan(
+        step, jnp.zeros_like(d_t[0]), (d_t, dl_t, du_t)
+    )
+    return jnp.moveaxis(cpv, 0, -1), jnp.moveaxis(inv, 0, -1)
+
+
+def fused_solve(g, v_in, cp, stamps=None, *, interpret: bool = False):
+    """Solve crossbar tiles with the fused multi-sweep Pallas kernel.
+
+    Drop-in replacement for the generic sweep loop in
+    `repro.core.solver._sweep_solve` — same batching semantics (leading
+    axes broadcast, per-config electrical scalars allowed), same
+    companion-stamp support, same final un-relaxed half-sweep. Runs the
+    full ``cp.gs_iters`` sweep budget; ``cp.tol`` early exit does not
+    apply (on-chip sweeps are cheap, and a data-dependent trip count
+    would stall the whole lane block anyway).
+
+    Args:
+      g: (..., M, N) device conductances.
+      v_in: (..., M) driver voltages.
+      cp: `CircuitParams` (floats or leading-axis arrays).
+      stamps: optional `Stamps` companion stamps / warm start.
+      interpret: run the kernel in Pallas interpret mode (CPU).
+
+    Returns:
+      `CrossbarSolution` matching the scan backend to float tolerance.
+    """
+    from repro.core.solver import (
+        CrossbarSolution,
+        SolveOptions,
+        Stamps,
+        _align,
+        solve_crossbar,
+    )
+
+    st = stamps or Stamps()
+    g = jnp.asarray(g)
+    v_in = jnp.asarray(v_in)
+    m, n = g.shape[-2], g.shape[-1]
+    dtype = g.dtype
+
+    lb = fused_lane_block(m, n, dtype)
+    if lb < 1:
+        global _fallback_notice_emitted
+        if not _fallback_notice_emitted:
+            _fallback_notice_emitted = True
+            logger.warning(
+                "fused solver backend: %dx%d tile exceeds the VMEM "
+                "residency budget (see kernels.gs_fused.fused_lane_block); "
+                "falling back to the per-half-sweep 'pallas' backend.",
+                m, n,
+            )
+        return solve_crossbar(
+            g, v_in, cp, stamps=stamps,
+            options=SolveOptions(backend="pallas", interpret=interpret),
+        )
+
+    batch = jnp.broadcast_shapes(
+        g.shape[:-2],
+        v_in.shape[:-1],
+        *(x.shape[:-2] for x in st.fields() if x is not None),
+    )
+    nd = len(batch) + 2
+    g_b = jnp.broadcast_to(g, batch + (m, n)).astype(dtype)
+    v_b = jnp.broadcast_to(v_in, batch + (m,)).astype(dtype)
+
+    def scal(value):
+        """Electrical scalar -> per-system (..., 1, 1) array."""
+        return jnp.broadcast_to(_align(value, nd, dtype), batch + (1, 1))
+
+    g_row, g_col = scal(cp.g_row), scal(cp.g_col)
+    g_source, g_tia = scal(cp.g_source), scal(cp.g_tia)
+    omega = scal(cp.omega)
+
+    def maybe(x):
+        return (
+            None if x is None
+            else jnp.broadcast_to(x.astype(dtype), batch + (m, n))
+        )
+
+    gsh_row, gsh_col = maybe(st.g_shunt_row), maybe(st.g_shunt_col)
+    inj_row, inj_col = maybe(st.i_inj_row), maybe(st.i_inj_col)
+    vc0 = maybe(st.v_init)
+
+    # Diagonals: wire-chain conductance + devices (+ companion shunts),
+    # mirroring solver._row_system / _col_system exactly.
+    idx_n = jnp.arange(n)
+    if n == 1:
+        chain_r = g_source
+    else:
+        chain_r = jnp.where(
+            idx_n == 0,
+            g_row + g_source,
+            jnp.where(idx_n == n - 1, g_row, 2.0 * g_row),
+        )
+    d_row = chain_r + g_b
+    if gsh_row is not None:
+        d_row = d_row + gsh_row
+
+    idx_m = jnp.arange(m)[:, None]
+    if m == 1:
+        chain_c = g_tia
+    else:
+        chain_c = jnp.where(
+            idx_m == 0,
+            g_col,
+            jnp.where(idx_m == m - 1, g_col + g_tia, 2.0 * g_col),
+        )
+    d_col = chain_c + g_b
+    if gsh_col is not None:
+        d_col = d_col + gsh_col
+
+    # Sweep-invariant Thomas coefficients (row systems run along N, col
+    # systems along M — computed along the last axis of the transposed
+    # view and swapped back).
+    cp_row, id_row = _thomas_coeffs(d_row, -g_row)
+    cp_colT, id_colT = _thomas_coeffs(jnp.swapaxes(d_col, -1, -2), -g_col)
+
+    # Right-hand-side constants: the driver source enters row column 0.
+    src_row = jnp.where(idx_n == 0, g_source * v_b[..., :, None], 0.0)
+    src_row = jnp.broadcast_to(src_row, batch + (m, n))
+    if inj_row is not None:
+        src_row = src_row + inj_row
+    injc = inj_col if inj_col is not None else jnp.zeros(batch + (m, n), dtype)
+    if vc0 is None:
+        vc0 = jnp.zeros(batch + (m, n), dtype)
+
+    # Flatten the batch onto the lane-block axis and pad; all-zero
+    # padded systems are inert (no divisions happen in the kernel).
+    b_total = 1
+    for s in batch:
+        b_total *= s
+    lb = min(lb, max(b_total, 1))
+    pad = (-b_total) % lb
+
+    def flat(a, rows, cols):
+        a = a.reshape((b_total, rows, cols))
+        if pad:
+            a = jnp.concatenate(
+                [a, jnp.zeros((pad, rows, cols), a.dtype)], axis=0
+            )
+        return a
+
+    vr, vc, res = gs_fused_nb(
+        flat(g_b, m, n),
+        flat(src_row, m, n),
+        flat(injc, m, n),
+        flat(jnp.swapaxes(cp_row, -1, -2), n, m),
+        flat(jnp.swapaxes(id_row, -1, -2), n, m),
+        flat(jnp.swapaxes(cp_colT, -1, -2), m, n),
+        flat(jnp.swapaxes(id_colT, -1, -2), m, n),
+        flat(-g_row, 1, 1),
+        flat(-g_col, 1, 1),
+        flat(omega, 1, 1),
+        flat(vc0, m, n),
+        m=m,
+        n=n,
+        sweeps=int(cp.gs_iters),
+        lane_block=lb,
+        interpret=interpret,
+    )
+    vr = vr[:b_total].reshape(batch + (m, n))
+    vc = vc[:b_total].reshape(batch + (m, n))
+    residual = res[:b_total, 0, 0].reshape(batch)
+    i_out = _align(cp.g_tia, vc.ndim - 1, dtype) * vc[..., m - 1, :]
+    return CrossbarSolution(i_out=i_out, vr=vr, vc=vc, residual=residual)

@@ -40,6 +40,7 @@ from repro.core.mapping import map_network
 from repro.core.partition import combine_outputs, tile_inputs, tile_matrix
 from repro.core.solver import (
     CircuitParams,
+    SolveOptions,
     _align,
     solve_crossbar,
     suggest_iters,
@@ -77,6 +78,7 @@ def layer_transient(
     c_segment,
     dtype=jnp.float32,
     record: bool = False,
+    solve_options: Optional[SolveOptions] = None,
 ) -> "tuple[TransientStats, jax.Array]":
     """Integrate one layer's parasitic crossbars for a probe batch.
 
@@ -119,7 +121,7 @@ def layer_transient(
     # One full-budget DC solve: the settling-band reference for every
     # refinement pass AND the operating point downstream layers chain
     # from.
-    ss = solve_crossbar(g_b, v_all, cp)
+    ss = solve_crossbar(g_b, v_all, cp, options=solve_options)
 
     t_rise = spec.resolved_t_rise()
     dt0 = spec.t_stop / spec.n_steps
@@ -127,6 +129,7 @@ def layer_transient(
     res = integrate_tiles(
         g_b, v_all, cp, spec, dt0,
         c_row=c_row, c_col=c_col, t_rise=t_rise, record=record_now, ss=ss,
+        solve_options=solve_options,
     )
     # Reduce probes (axis -2) and tiles (axis -1) of the (C, P, 2T) batch;
     # leading config/trial axes survive.
@@ -145,7 +148,7 @@ def layer_transient(
         res = integrate_tiles(
             g_b, v_all, cp, spec, dt_cur,
             c_row=c_row, c_col=c_col, t_rise=t_rise, record=record_now,
-            ss=ss,
+            ss=ss, solve_options=solve_options,
         )
         last = jnp.max(res.last_oob, axis=(-1, -2))
         settle = settle_time(last, dt_cur, spec.n_steps)
@@ -174,6 +177,7 @@ def network_transient_stacked(
     tol: float,
     dtype=jnp.float32,
     record: bool = False,
+    solve_options: Optional[SolveOptions] = None,
 ) -> TransientResult:
     """Transient co-simulation of a stacked configuration batch.
 
@@ -202,6 +206,7 @@ def network_transient_stacked(
             s, i_out_ss = layer_transient(
                 gp[layer], gn[layer], plan, cp, spec, a, v_unit,
                 c_segment=sc["c_seg"], dtype=dtype, record=record,
+                solve_options=solve_options,
             )
             stats.append(s)
             # Chain probe activations through the DC operating point the
@@ -243,6 +248,7 @@ def run_transient(
     *,
     spec: Optional[TransientSpec] = None,
     record: bool = False,
+    solve_options: Optional[SolveOptions] = None,
 ) -> TransientResult:
     """Waveform-accurate latency & energy of one or more configurations.
 
@@ -303,6 +309,7 @@ def run_transient(
     return network_transient_stacked(
         g_pos, g_neg, k, scal, plans, cfg0.resolved_neuron(), spec,
         x_probe, cfg0.vdd, iters, cfg0.gs_tol, dtype=dtype, record=record,
+        solve_options=solve_options,
     )
 
 

@@ -37,11 +37,11 @@ import jax.numpy as jnp
 from repro.core.solver import (
     CircuitParams,
     CrossbarSolution,
-    TridiagFn,
+    SolveOptions,
+    Stamps,
     _align,
     crossbar_power,
     solve_crossbar,
-    tridiag_scan,
 )
 from repro.transient.spec import TransientSpec
 
@@ -107,7 +107,7 @@ def integrate_tiles(
     c_row: jax.Array,
     c_col: jax.Array,
     t_rise: float,
-    tridiag: TridiagFn = tridiag_scan,
+    solve_options: "SolveOptions | None" = None,
     record: bool = False,
     ss: "CrossbarSolution | None" = None,
 ) -> TileTransient:
@@ -145,7 +145,7 @@ def integrate_tiles(
 
     # Steady state the waveforms settle to (full-budget DC solve).
     if ss is None:
-        ss = solve_crossbar(g, v_in, cp, tridiag=tridiag)
+        ss = solve_crossbar(g, v_in, cp, options=solve_options)
     vc_ss_foot = ss.vc[..., m - 1, :]
     band = spec.rtol * jnp.max(jnp.abs(vc_ss_foot), axis=-1, keepdims=True) + spec.atol
 
@@ -179,12 +179,14 @@ def integrate_tiles(
             g,
             v_t,
             cp_step,
-            tridiag=tridiag,
-            g_shunt_row=geq_r,
-            g_shunt_col=geq_c,
-            i_inj_row=jnp.broadcast_to(inj_r, zeros_nodes.shape),
-            i_inj_col=jnp.broadcast_to(inj_c, zeros_nodes.shape),
-            v_init=vc,
+            stamps=Stamps(
+                g_shunt_row=geq_r,
+                g_shunt_col=geq_c,
+                i_inj_row=jnp.broadcast_to(inj_r, zeros_nodes.shape),
+                i_inj_col=jnp.broadcast_to(inj_c, zeros_nodes.shape),
+                v_init=vc,
+            ),
+            options=solve_options,
         )
         if trap:
             ic_r = geq_r * (sol.vr - vr) - ic_r

@@ -1,0 +1,274 @@
+"""Differential + API tests of the solver backend registry.
+
+Every registered backend ("scan" / "pallas" / "fused") must produce the
+same `CrossbarSolution` as the pure-scan sweep loop and, where the dense
+MNA oracle applies, as `solve_dense_mna` — including degenerate shapes
+(M=N=1, single row/column), non-power-of-two tiles, batch sizes that are
+not lane multiples, and transient companion stamps. The Pallas backends
+run in interpret mode here so the exact kernel code paths execute on
+CPU CI.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backends import (
+    SolverBackend,
+    available_backends,
+    default_backend_name,
+    get_backend,
+    register_backend,
+)
+from repro.core.devices import MRAM
+from repro.core.solver import (
+    CircuitParams,
+    SolveOptions,
+    Stamps,
+    solve_crossbar,
+    solve_dense_mna,
+    tridiag_scan,
+)
+
+CP = CircuitParams(r_row=13.8, r_col=13.8, gs_iters=96, tol=0.0)
+BACKENDS = ("scan", "pallas", "fused")
+
+
+def _opts(backend):
+    # interpret=True is consumed by the Pallas backends and ignored by
+    # "scan"; forcing it keeps the tests identical on and off TPU.
+    return SolveOptions(backend=backend, interpret=True)
+
+
+def _random_tile(key, m, n):
+    kg, kv = jax.random.split(key)
+    g = jax.random.uniform(kg, (m, n), minval=MRAM.g_off, maxval=MRAM.g_on)
+    v = jax.random.uniform(kv, (m,), minval=0.0, maxval=0.8)
+    return g, v
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("m,n", [(1, 1), (1, 8), (8, 1), (5, 7)])
+def test_backend_matches_oracle(backend, m, n):
+    g, v = _random_tile(jax.random.PRNGKey(m * 100 + n), m, n)
+    oracle = solve_dense_mna(g, v, CP)
+    got = solve_crossbar(g, v, CP, options=_opts(backend))
+    np.testing.assert_allclose(
+        np.asarray(got.i_out), np.asarray(oracle.i_out), rtol=5e-4, atol=1e-9
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.vc), np.asarray(oracle.vc), rtol=5e-3, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("backend", ("pallas", "fused"))
+def test_backend_matches_scan_batched(backend):
+    """Batch axes that are not multiples of the 128-lane tile."""
+    key = jax.random.PRNGKey(7)
+    g = jax.random.uniform(key, (3, 6, 5), minval=MRAM.g_off, maxval=MRAM.g_on)
+    v = jax.random.uniform(jax.random.PRNGKey(8), (5, 3, 6), maxval=0.8)
+    ref = solve_crossbar(g, v, CP, options=_opts("scan"))
+    got = solve_crossbar(g, v, CP, options=_opts(backend))
+    assert got.i_out.shape == (5, 3, 5)
+    np.testing.assert_allclose(
+        np.asarray(got.i_out), np.asarray(ref.i_out), rtol=1e-4, atol=1e-9
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.vc), np.asarray(ref.vc), rtol=1e-4, atol=1e-7
+    )
+
+
+@pytest.mark.parametrize("backend", ("pallas", "fused"))
+def test_backend_matches_scan_with_companion_stamps(backend):
+    """Transient companion stamps (shunts + injections + warm start)."""
+    m, n = 6, 5
+    g, v = _random_tile(jax.random.PRNGKey(21), m, n)
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(22), 5)
+    stamps = Stamps(
+        g_shunt_row=jax.random.uniform(k1, (m, n), minval=1e-4, maxval=1e-2),
+        g_shunt_col=jax.random.uniform(k2, (m, n), minval=1e-4, maxval=1e-2),
+        i_inj_row=1e-4 * jax.random.normal(k3, (m, n)),
+        i_inj_col=1e-4 * jax.random.normal(k4, (m, n)),
+        v_init=0.1 * jax.random.uniform(k5, (m, n)),
+    )
+    ref = solve_crossbar(g, v, CP, stamps=stamps, options=_opts("scan"))
+    got = solve_crossbar(g, v, CP, stamps=stamps, options=_opts(backend))
+    np.testing.assert_allclose(
+        np.asarray(got.vc), np.asarray(ref.vc), rtol=1e-4, atol=1e-8
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.vr), np.asarray(ref.vr), rtol=1e-4, atol=1e-8
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.i_out), np.asarray(ref.i_out), rtol=1e-4, atol=1e-10
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_per_config_params(backend):
+    """Leading-axis electrical scalars (the explore engine's shape)."""
+    g, v = _random_tile(jax.random.PRNGKey(31), 4, 6)
+    cp = CircuitParams(
+        r_row=jnp.asarray([5.0, 13.8, 40.0]),
+        r_col=jnp.asarray([5.0, 13.8, 40.0]),
+        gs_iters=96,
+        tol=0.0,
+    )
+    g3 = jnp.broadcast_to(g, (3, 4, 6))
+    v3 = jnp.broadcast_to(v, (3, 4))
+    ref = solve_crossbar(g3, v3, cp, options=_opts("scan"))
+    got = solve_crossbar(g3, v3, cp, options=_opts(backend))
+    assert got.i_out.shape == (3, 6)
+    np.testing.assert_allclose(
+        np.asarray(got.i_out), np.asarray(ref.i_out), rtol=1e-4, atol=1e-9
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_on_netlist_conductances(backend):
+    """The SPICE-netlist round-trip fixture, solved by every backend."""
+    from repro.core.imac import IMACConfig, build_plans
+    from repro.core.mapping import map_network
+    from repro.core.netlist import map_layer, parse_tile_conductances
+
+    key = jax.random.PRNGKey(61)
+    kw, kb, kv = jax.random.split(key, 3)
+    params = [(jax.random.normal(kw, (5, 3)), 0.1 * jax.random.normal(kb, (3,)))]
+    cfg = IMACConfig(
+        tech=MRAM, array_rows=4, array_cols=4, r_source=120.0, r_tia=10.0
+    )
+    mapped = map_network(params, MRAM, v_unit=cfg.vdd)
+    plans = build_plans([5, 3], cfg)
+    text = map_layer(0, mapped[0], plans[0], cfg)
+    gp, gn = parse_tile_conductances(text, plans[0])
+    r_seg = cfg.interconnect.r_segment
+    cp = CircuitParams(
+        r_row=r_seg, r_col=r_seg, r_source=120.0, r_tia=10.0,
+        gs_iters=200, tol=0.0,
+    )
+    v = jax.random.uniform(kv, (plans[0].rows,), maxval=cfg.vdd)
+    for g_tile in (gp[0], gn[0]):
+        g = jnp.asarray(g_tile)
+        oracle = solve_dense_mna(g, v, cp)
+        got = solve_crossbar(g, v, cp, options=_opts(backend))
+        np.testing.assert_allclose(
+            np.asarray(got.i_out), np.asarray(oracle.i_out),
+            rtol=1e-3, atol=1e-9,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got.vc), np.asarray(oracle.vc), rtol=5e-3, atol=1e-6
+        )
+
+
+def test_stamps_is_pytree():
+    st = Stamps(v_init=jnp.ones((2, 2)))
+    leaves = jax.tree_util.tree_leaves(st)
+    assert len(leaves) == 1
+    mapped = jax.tree_util.tree_map(lambda x: 2.0 * x, st)
+    np.testing.assert_allclose(np.asarray(mapped.v_init), 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_deprecated_stamp_kwargs_warn_and_forward():
+    m, n = 5, 4
+    g, v = _random_tile(jax.random.PRNGKey(41), m, n)
+    gsh = jnp.full((m, n), 1e-3)
+    v0 = jnp.full((m, n), 0.05)
+    with pytest.warns(DeprecationWarning, match="Stamps"):
+        old = solve_crossbar(g, v, CP, g_shunt_row=gsh, v_init=v0)
+    new = solve_crossbar(g, v, CP, stamps=Stamps(g_shunt_row=gsh, v_init=v0))
+    np.testing.assert_allclose(
+        np.asarray(old.vc), np.asarray(new.vc), rtol=0, atol=0
+    )
+
+
+def test_deprecated_tridiag_warns_and_forwards():
+    g, v = _random_tile(jax.random.PRNGKey(42), 9, 11)
+    with pytest.warns(DeprecationWarning, match="tridiag"):
+        old = solve_crossbar(g, v, CP, tridiag=tridiag_scan)
+    new = solve_crossbar(g, v, CP, options=SolveOptions(backend="scan"))
+    np.testing.assert_allclose(
+        np.asarray(old.i_out), np.asarray(new.i_out), rtol=0, atol=0
+    )
+
+
+def test_mixing_old_and_new_spellings_raises():
+    g, v = _random_tile(jax.random.PRNGKey(43), 4, 4)
+    v0 = jnp.zeros((4, 4))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="Stamps"):
+            solve_crossbar(g, v, CP, stamps=Stamps(v_init=v0), v_init=v0)
+        with pytest.raises(ValueError, match="tridiag"):
+            solve_crossbar(
+                g, v, CP,
+                tridiag=tridiag_scan,
+                options=SolveOptions(backend="scan"),
+            )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_custom_callable_backend_is_used():
+    g, v = _random_tile(jax.random.PRNGKey(51), 6, 5)
+    calls = []
+
+    def my_tridiag(dl, d, du, b):
+        calls.append(1)
+        return tridiag_scan(dl, d, du, b)
+
+    got = solve_crossbar(g, v, CP, options=SolveOptions(backend=my_tridiag))
+    ref = solve_crossbar(g, v, CP, options=_opts("scan"))
+    assert calls, "custom tridiag callable was never traced"
+    np.testing.assert_allclose(
+        np.asarray(got.i_out), np.asarray(ref.i_out), rtol=1e-6
+    )
+
+
+def test_unknown_backend_name_lists_available():
+    with pytest.raises(KeyError, match="scan"):
+        get_backend("no-such-backend")
+
+
+def test_env_default_backend(monkeypatch):
+    monkeypatch.delenv("REPRO_SOLVER_BACKEND", raising=False)
+    assert default_backend_name() == "scan"
+    assert get_backend(None).name == "scan"
+    monkeypatch.setenv("REPRO_SOLVER_BACKEND", "fused")
+    assert default_backend_name() == "fused"
+    assert get_backend(None).name == "fused"
+
+
+def test_register_backend_roundtrip():
+    name = "test-echo-scan"
+    register_backend(
+        SolverBackend(name=name, make_tridiag=lambda options: tridiag_scan)
+    )
+    assert name in available_backends()
+    g, v = _random_tile(jax.random.PRNGKey(52), 5, 5)
+    got = solve_crossbar(g, v, CP, options=SolveOptions(backend=name))
+    ref = solve_crossbar(g, v, CP, options=_opts("scan"))
+    np.testing.assert_allclose(
+        np.asarray(got.i_out), np.asarray(ref.i_out), rtol=0, atol=0
+    )
+
+
+def test_fused_vmem_fallback():
+    """Tiles past the VMEM residency budget delegate to 'pallas'."""
+    from repro.kernels.gs_fused.ops import fused_lane_block
+
+    assert fused_lane_block(16, 16) >= 1
+    assert fused_lane_block(512, 512) == 0
+    # The solve must still succeed (falls back internally).
+    g, v = _random_tile(jax.random.PRNGKey(53), 16, 16)
+    got = solve_crossbar(g, v, CP, options=_opts("fused"))
+    assert got.i_out.shape == (16,)

@@ -131,12 +131,20 @@ def test_suggest_iters_converges_512():
     assert rel < 5e-3, rel
 
 
-def test_pluggable_tridiag():
-    from repro.kernels.tridiag.ops import tridiag
+def test_pluggable_backends():
+    from repro.core.solver import SolveOptions
 
     g, v = _random_tile(jax.random.PRNGKey(8), 9, 11)
-    a = solve_crossbar(g, v, CP, tridiag=tridiag_scan)
-    b = solve_crossbar(g, v, CP, tridiag=lambda *args: tridiag(*args, interpret=True))
+    a = solve_crossbar(g, v, CP, options=SolveOptions(backend="scan"))
+    b = solve_crossbar(
+        g, v, CP, options=SolveOptions(backend="pallas", interpret=True)
+    )
+    c = solve_crossbar(
+        g, v, CP, options=SolveOptions(backend=tridiag_scan)
+    )
     np.testing.assert_allclose(
         np.asarray(a.i_out), np.asarray(b.i_out), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(a.i_out), np.asarray(c.i_out), rtol=0, atol=0
     )
