@@ -11,7 +11,8 @@ Public API:
   neurons.NeuronModel
   imac.IMACConfig / IMACNetwork / imac_linear (Modules 3-4)
   netlist.map_layer / map_imac          (SPICE netlist generation)
-  evaluate.test_imac / evaluate_batch / sweep (Module 1: testIMAC)
+  evaluate.test_imac / evaluate_batch / evaluate_netlist / sweep
+                                        (Module 1: testIMAC)
 """
 from repro.core.devices import (
     CBRAM,
@@ -26,6 +27,7 @@ from repro.core.devices import (
 from repro.core.evaluate import (
     IMACResult,
     evaluate_batch,
+    evaluate_netlist,
     structure_key,
     sweep,
     test_imac,
@@ -89,6 +91,7 @@ __all__ = [
     "custom_tech",
     "default_backend_name",
     "evaluate_batch",
+    "evaluate_netlist",
     "get_backend",
     "get_neuron",
     "get_tech",

@@ -524,6 +524,57 @@ def test_imac(
     )[0]
 
 
+def evaluate_netlist(
+    netlist,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    main: "str | None" = None,
+    cfg_overrides: "Optional[dict]" = None,
+    **kw,
+):
+    """Evaluate a SPICE netlist on (x, y) — the netlist *is* the model.
+
+    `netlist` is either the ``{filename: contents}`` dict `map_imac`
+    returns (or any equivalent multi-file deck) or an already-parsed
+    `repro.spice.Circuit`. The netlist is lowered back to engine
+    structures (`repro.spice.lower_network`): conductances, partition
+    plans, neuron models, electrical parameters and — when the deck
+    states a ``.TRAN`` — a `TransientSpec`, then evaluated through the
+    same `evaluate_batch` path as a trained-parameter deployment.
+
+    Args:
+      netlist: {filename: contents} dict or a parsed Circuit.
+      x, y: test inputs (digital units) and integer labels.
+      main: top file name for multi-file dicts (default `imac_main.sp`).
+      cfg_overrides: IMACConfig field overrides applied after lowering
+        (e.g. ``{"gs_iters": 96}`` — engine tuning the netlist cannot
+        state).
+      **kw: forwarded to `evaluate_batch` (chunk, noise_key,
+        solve_options, ...).
+
+    Returns:
+      (IMACResult, LoweredNetwork) — the result plus the lowered
+      structures for inspection (recovered sample, conductances, spec).
+
+    Raises:
+      repro.spice.NonCrossbarError: the netlist is not a generated-form
+        IMAC network. Flat third-party crossbars go through
+        `repro.spice.lower_crossbar` + `solve_crossbar` instead.
+    """
+    from repro.spice.lower import lower_network
+
+    net = lower_network(netlist, main=main)
+    params = [
+        (jnp.asarray(w), jnp.asarray(b)) for w, b in net.to_params()
+    ]
+    cfg = net.to_config(**(cfg_overrides or {}))
+    result = evaluate_batch(
+        params, x, y, [cfg], mapped=[net.to_mapped()], **kw
+    )[0]
+    return result, net
+
+
 def sweep(
     params: Params,
     x: jax.Array,

@@ -6,39 +6,50 @@ interconnect parasitics, differential memristor pairs, drivers, TIAs and
 behavioural neuron sources), and `map_imac` concatenates the layer files
 into the main circuit file, exactly as Algorithm 1 describes.
 
-The container has no SPICE binary, so the JAX solver is the simulator;
-`parse_tile_conductances` round-trips a generated netlist back into the
-conductance matrices so tests can verify netlist ⇄ solver agreement via
-the dense-MNA oracle.
+Generation goes through the `repro.spice` Circuit IR: `layer_circuit` /
+`imac_circuits` build cards, and the text files are printed by the same
+canonical emitter that re-prints parsed netlists — which is what makes
+``emit -> parse -> emit`` byte-stable. `repro.spice.lower` turns parsed
+netlists (ours or third-party) back into solver structures; the legacy
+regex helpers below (`parse_tile_conductances`, ...) remain for
+lightweight single-file round trips.
 """
 from __future__ import annotations
 
-import io
 import re
-from typing import TYPE_CHECKING, Dict, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.imac import IMACConfig
 from repro.core.mapping import MappedLayer
 from repro.core.partition import PartitionPlan, tile_matrix
+from repro.spice.emitter import emit, fmt as _fmt
+from repro.spice.ir import (
+    BehavioralSource,
+    Capacitor,
+    Card,
+    Circuit,
+    Comment,
+    Directive,
+    Instance,
+    Resistor,
+    Subckt,
+    VSource,
+)
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only, avoids a cycle
     from repro.transient.spec import TransientSpec
 
 
-def _fmt(x: float) -> str:
-    return f"{x:.6g}"
-
-
-def map_layer(
+def layer_circuit(
     layer_idx: int,
     mapped: MappedLayer,
     plan: PartitionPlan,
     cfg: IMACConfig,
     transient: "Optional[TransientSpec]" = None,
-) -> str:
-    """Module 3: one layer's SPICE subcircuit (with parasitics + tiling).
+) -> Circuit:
+    """Module 3 as IR: one layer's subcircuit file as a `Circuit`.
 
     Nodes:
       in_<i>       — layer input voltages (i in [0, fan_in]; last = bias).
@@ -60,55 +71,67 @@ def map_layer(
     gn = np.asarray(tile_matrix(mapped.g_neg, plan))
     rows, cols = plan.rows, plan.cols
 
-    buf = io.StringIO()
-    w = buf.write
-    w(f"* Layer {layer_idx}: {plan.total_rows - 1}x{plan.total_cols} "
-      f"(+bias row), HP={plan.hp} VP={plan.vp}, tiles {rows}x{cols}\n")
-    w(f"* tech={tech.name} R_low={_fmt(tech.r_low)} R_high={_fmt(tech.r_high)}\n")
-    ins = " ".join(f"in_{i}" for i in range(plan.total_rows))
-    outs = " ".join(f"out_{j}" for j in range(plan.total_cols))
-    w(f".SUBCKT layer{layer_idx} {ins} {outs}\n")
-
+    body: List[Card] = []
     for t in range(plan.n_tiles):
         h, vcol = divmod(t, plan.vp)
-        w(f"* tile {t} (h={h}, v={vcol}) differential pair\n")
+        body.append(Comment(f" tile {t} (h={h}, v={vcol}) differential pair"))
         for i in range(rows):
             gi = h * rows + i
             in_node = f"in_{gi}" if gi < plan.total_rows else "0"
             # Driver source resistance into the row head (shared by the
             # differential pair arrays -> emitted per polarity).
             for pol in ("p", "n"):
-                w(f"Rsrc_{t}{pol}_{i} {in_node} t{t}_{pol}r_{i}_0 "
-                  f"{_fmt(cfg.r_source)}\n")
+                body.append(Resistor(
+                    f"Rsrc_{t}{pol}_{i}", in_node, f"t{t}_{pol}r_{i}_0",
+                    cfg.r_source,
+                ))
                 if transient is not None:
-                    w(f"Cdrv_{t}{pol}_{i} t{t}_{pol}r_{i}_0 0 "
-                      f"{_fmt(transient.c_driver)}\n")
+                    body.append(Capacitor(
+                        f"Cdrv_{t}{pol}_{i}", f"t{t}_{pol}r_{i}_0", "0",
+                        transient.c_driver,
+                    ))
                 for j in range(cols):
                     node = f"t{t}_{pol}r_{i}_{j}"
                     if j + 1 < cols:
-                        w(f"Rrw_{t}{pol}_{i}_{j} {node} t{t}_{pol}r_{i}_{j+1} "
-                          f"{_fmt(r_seg)}\n")
-                    w(f"Crw_{t}{pol}_{i}_{j} {node} 0 {_fmt(c_seg)}\n")
+                        body.append(Resistor(
+                            f"Rrw_{t}{pol}_{i}_{j}", node,
+                            f"t{t}_{pol}r_{i}_{j+1}", r_seg,
+                        ))
+                    body.append(Capacitor(
+                        f"Crw_{t}{pol}_{i}_{j}", node, "0", c_seg,
+                    ))
                     g = gp[t, i, j] if pol == "p" else gn[t, i, j]
                     if g > 0.0:
-                        w(f"Rmem_{t}{pol}_{i}_{j} {node} t{t}_c{pol}_{i}_{j} "
-                          f"{_fmt(1.0 / g)}\n")
+                        body.append(Resistor(
+                            f"Rmem_{t}{pol}_{i}_{j}", node,
+                            f"t{t}_c{pol}_{i}_{j}", 1.0 / g,
+                        ))
         for pol in ("p", "n"):
             for j in range(cols):
                 for i in range(rows):
                     node = f"t{t}_c{pol}_{i}_{j}"
                     if i + 1 < rows:
-                        w(f"Rcw_{t}{pol}_{i}_{j} {node} t{t}_c{pol}_{i+1}_{j} "
-                          f"{_fmt(r_seg)}\n")
-                    w(f"Ccw_{t}{pol}_{i}_{j} {node} 0 {_fmt(c_seg)}\n")
+                        body.append(Resistor(
+                            f"Rcw_{t}{pol}_{i}_{j}", node,
+                            f"t{t}_c{pol}_{i+1}_{j}", r_seg,
+                        ))
+                    body.append(Capacitor(
+                        f"Ccw_{t}{pol}_{i}_{j}", node, "0", c_seg,
+                    ))
                 # TIA virtual ground at the column foot; the 0V source
                 # senses the column current (standard SPICE idiom).
                 if transient is not None:
-                    w(f"Ctia_{t}{pol}_{j} t{t}_c{pol}_{rows-1}_{j} 0 "
-                      f"{_fmt(transient.c_tia)}\n")
-                w(f"Rtia_{t}{pol}_{j} t{t}_c{pol}_{rows-1}_{j} "
-                  f"t{t}_s{pol}_{j} {_fmt(cfg.r_tia)}\n")
-                w(f"Vsense_{t}{pol}_{j} t{t}_s{pol}_{j} 0 DC 0\n")
+                    body.append(Capacitor(
+                        f"Ctia_{t}{pol}_{j}", f"t{t}_c{pol}_{rows-1}_{j}",
+                        "0", transient.c_tia,
+                    ))
+                body.append(Resistor(
+                    f"Rtia_{t}{pol}_{j}", f"t{t}_c{pol}_{rows-1}_{j}",
+                    f"t{t}_s{pol}_{j}", cfg.r_tia,
+                ))
+                body.append(VSource(
+                    f"Vsense_{t}{pol}_{j}", f"t{t}_s{pol}_{j}", "0", dc=0.0,
+                ))
 
     # Differential amp + neuron per logical output column: behavioural
     # E-source summing the sensed partial currents of all horizontal
@@ -130,9 +153,107 @@ def map_layer(
             fexpr = f"max(0,({zexpr}))"
         else:  # linear readout
             fexpr = zexpr
-        w(f"Eneur_{j} out_{j} 0 VALUE={{{fexpr}}}\n")
-    w(f".ENDS layer{layer_idx}\n")
-    return buf.getvalue()
+        body.append(BehavioralSource(f"Eneur_{j}", f"out_{j}", "0", fexpr))
+
+    ins = tuple(f"in_{i}" for i in range(plan.total_rows))
+    outs = tuple(f"out_{j}" for j in range(plan.total_cols))
+    cards: List[Card] = [
+        Comment(
+            f" Layer {layer_idx}: {plan.total_rows - 1}x{plan.total_cols} "
+            f"(+bias row), HP={plan.hp} VP={plan.vp}, tiles {rows}x{cols}"
+        ),
+        Comment(
+            f" tech={tech.name} R_low={_fmt(tech.r_low)} "
+            f"R_high={_fmt(tech.r_high)}"
+        ),
+        Subckt(name=f"layer{layer_idx}", ports=ins + outs, cards=tuple(body)),
+    ]
+    return Circuit(cards=tuple(cards))
+
+
+def map_layer(
+    layer_idx: int,
+    mapped: MappedLayer,
+    plan: PartitionPlan,
+    cfg: IMACConfig,
+    transient: "Optional[TransientSpec]" = None,
+) -> str:
+    """Module 3: one layer's SPICE subcircuit text (see `layer_circuit`)."""
+    return emit(layer_circuit(layer_idx, mapped, plan, cfg, transient=transient))
+
+
+def imac_circuits(
+    mapped_layers: Sequence[MappedLayer],
+    plans: Sequence[PartitionPlan],
+    cfg: IMACConfig,
+    sample: "np.ndarray | None" = None,
+    transient: "Optional[TransientSpec]" = None,
+) -> Dict[str, Circuit]:
+    """Module 4 as IR: {filename: Circuit} for the whole network."""
+    transient = transient if transient is not None else cfg.transient
+    files: Dict[str, Circuit] = {}
+    cards: List[Card] = [
+        Comment(" IMAC-Sim-JAX generated netlist"),
+        Directive("OPTION", ("POST",)),
+        Comment(
+            f" topology: {[p.total_rows - 1 for p in plans]} -> "
+            f"{plans[-1].total_cols}"
+        ),
+    ]
+    if transient is not None:
+        method = "TRAP" if transient.method == "trap" else "GEAR"
+        cards.append(Directive("OPTION", (f"METHOD={method}",)))
+    for idx, (mapped, plan) in enumerate(zip(mapped_layers, plans)):
+        fname = f"layer{idx}.sp"
+        files[fname] = layer_circuit(idx, mapped, plan, cfg, transient=transient)
+        cards.append(Directive("INCLUDE", (f"'{fname}'",)))
+
+    cards.append(VSource("VDD", "vdd", "0", dc=cfg.vdd))
+    cards.append(VSource("VSS", "vss", "0", dc=cfg.vss))
+    n_in = plans[0].total_rows - 1
+    t_rise = transient.resolved_t_rise() if transient is not None else 0.0
+    for i in range(n_in):
+        val = 0.0 if sample is None else float(sample[i]) * mapped_layers[0].v_unit
+        if transient is not None:
+            # The integrator's drive: v(0) = 0, PWL ramp to the sample
+            # value over [0, t_rise], held to the horizon.
+            cards.append(VSource(
+                f"Vin_{i}", f"x0_{i}", "0",
+                pwl=((0.0, 0.0), (t_rise, val), (transient.t_stop, val)),
+            ))
+        else:
+            cards.append(VSource(f"Vin_{i}", f"x0_{i}", "0", dc=val))
+    # Bias rows driven at v_unit (ramped like every other drive in a
+    # transient analysis — the integrator starts all nodes at 0 V).
+    for idx, plan in enumerate(plans):
+        vb = mapped_layers[idx].v_unit
+        bias_node = f"x{idx}_{plan.total_rows - 1}"
+        if transient is not None:
+            cards.append(VSource(
+                f"Vbias_{idx}", bias_node, "0",
+                pwl=((0.0, 0.0), (t_rise, vb), (transient.t_stop, vb)),
+            ))
+        else:
+            cards.append(VSource(f"Vbias_{idx}", bias_node, "0", dc=vb))
+    # Chain the layer subcircuits: outputs of layer k are inputs of k+1.
+    for idx, plan in enumerate(plans):
+        ins = tuple(f"x{idx}_{i}" for i in range(plan.total_rows))
+        outs = tuple(f"x{idx + 1}_{j}" for j in range(plan.total_cols))
+        cards.append(Instance(f"Xlayer{idx}", ins + outs, f"layer{idx}"))
+    cards.append(Directive("OP"))
+    if transient is not None:
+        cards.append(Directive(
+            "TRAN", (_fmt(transient.dt), _fmt(transient.t_stop))
+        ))
+    else:
+        cards.append(Directive("TRAN", ("1n", _fmt(cfg.t_sampling))))
+    prints = tuple(
+        f"V(x{len(plans)}_{j})" for j in range(plans[-1].total_cols)
+    )
+    cards.append(Directive("PRINT", ("TRAN",) + prints))
+    cards.append(Directive("END"))
+    files["imac_main.sp"] = Circuit(cards=tuple(cards))
+    return files
 
 
 def map_imac(
@@ -155,65 +276,10 @@ def map_imac(
     integration method option, and the periphery capacitances in the
     layer subcircuits.
     """
-    transient = transient if transient is not None else cfg.transient
-    files: Dict[str, str] = {}
-    lines = ["* IMAC-Sim-JAX generated netlist", ".OPTION POST"]
-    lines.append(f"* topology: {[p.total_rows - 1 for p in plans]} -> "
-                 f"{plans[-1].total_cols}")
-    if transient is not None:
-        method = "TRAP" if transient.method == "trap" else "GEAR"
-        lines.append(f".OPTION METHOD={method}")
-    for idx, (mapped, plan) in enumerate(zip(mapped_layers, plans)):
-        fname = f"layer{idx}.sp"
-        files[fname] = map_layer(idx, mapped, plan, cfg, transient=transient)
-        lines.append(f".INCLUDE '{fname}'")
-
-    vdd = cfg.vdd
-    lines.append(f"VDD vdd 0 DC {_fmt(vdd)}")
-    lines.append(f"VSS vss 0 DC {_fmt(cfg.vss)}")
-    n_in = plans[0].total_rows - 1
-    t_rise = transient.resolved_t_rise() if transient is not None else 0.0
-    for i in range(n_in):
-        val = 0.0 if sample is None else float(sample[i]) * mapped_layers[0].v_unit
-        if transient is not None:
-            # The integrator's drive: v(0) = 0, PWL ramp to the sample
-            # value over [0, t_rise], held to the horizon.
-            lines.append(
-                f"Vin_{i} x0_{i} 0 PWL(0 0 {_fmt(t_rise)} {_fmt(val)} "
-                f"{_fmt(transient.t_stop)} {_fmt(val)})"
-            )
-        else:
-            lines.append(f"Vin_{i} x0_{i} 0 DC {_fmt(val)}")
-    # Bias rows driven at v_unit (ramped like every other drive in a
-    # transient analysis — the integrator starts all nodes at 0 V).
-    for idx, plan in enumerate(plans):
-        vb = mapped_layers[idx].v_unit
-        if transient is not None:
-            lines.append(
-                f"Vbias_{idx} x{idx}_{plan.total_rows - 1} 0 "
-                f"PWL(0 0 {_fmt(t_rise)} {_fmt(vb)} "
-                f"{_fmt(transient.t_stop)} {_fmt(vb)})"
-            )
-        else:
-            lines.append(f"Vbias_{idx} x{idx}_{plan.total_rows - 1} 0 DC "
-                         f"{_fmt(vb)}")
-    # Chain the layer subcircuits: outputs of layer k are inputs of k+1.
-    for idx, plan in enumerate(plans):
-        ins = " ".join(f"x{idx}_{i}" for i in range(plan.total_rows))
-        outs = " ".join(
-            f"x{idx + 1}_{j}" for j in range(plan.total_cols)
-        )
-        lines.append(f"Xlayer{idx} {ins} {outs} layer{idx}")
-    lines.append(".OP")
-    if transient is not None:
-        lines.append(f".TRAN {_fmt(transient.dt)} {_fmt(transient.t_stop)}")
-    else:
-        lines.append(f".TRAN 1n {_fmt(cfg.t_sampling)}")
-    outs = " ".join(f"V(x{len(plans)}_{j})" for j in range(plans[-1].total_cols))
-    lines.append(f".PRINT TRAN {outs}")
-    lines.append(".END")
-    files["imac_main.sp"] = "\n".join(lines) + "\n"
-    return files
+    circuits = imac_circuits(
+        mapped_layers, plans, cfg, sample=sample, transient=transient
+    )
+    return {name: emit(circ) for name, circ in circuits.items()}
 
 
 _RMEM = re.compile(

@@ -510,12 +510,15 @@ def solve_ideal(g: jax.Array, v_in: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _mna_matrix(g, v_in, cp: CircuitParams):
+def _mna_matrix(g, v_in, cp: CircuitParams, stamps: "Stamps | None" = None):
     """Assemble the full (2MN, 2MN) conductance matrix and RHS.
 
     Node order: row nodes r(i,j) = i*N+j, then column nodes
     c(i,j) = M*N + i*N + j. Ground (TIA virtual ground, source return) is
-    eliminated.
+    eliminated. Optional `stamps` add the transient companion model
+    (per-node shunt conductances on the diagonal, history-current
+    injections on the RHS), so an implicit integrator step can be
+    oracle-checked against the same dense assembly as the DC solve.
     """
     m, n = g.shape
     nn = 2 * m * n
@@ -555,11 +558,31 @@ def _mna_matrix(g, v_in, cp: CircuitParams):
     for j in range(n):
         p = c_idx(m - 1, j)
         a = a.at[p, p].add(cp.g_tia)
+    if stamps is not None:
+        mn = m * n
+        diag = jnp.arange(nn)
+        for block, g_sh, i_inj in (
+            (slice(0, mn), stamps.g_shunt_row, stamps.i_inj_row),
+            (slice(mn, nn), stamps.g_shunt_col, stamps.i_inj_col),
+        ):
+            if g_sh is not None:
+                flat = jnp.broadcast_to(
+                    jnp.asarray(g_sh, g.dtype), (m, n)
+                ).reshape(mn)
+                a = a.at[diag[block], diag[block]].add(flat)
+            if i_inj is not None:
+                flat = jnp.broadcast_to(
+                    jnp.asarray(i_inj, g.dtype), (m, n)
+                ).reshape(mn)
+                rhs = rhs.at[block].add(flat)
     return a, rhs
 
 
 def mna_system(
-    g: jax.Array, v_in: jax.Array, cp: CircuitParams
+    g: jax.Array,
+    v_in: jax.Array,
+    cp: CircuitParams,
+    stamps: "Stamps | None" = None,
 ) -> "tuple[jax.Array, jax.Array]":
     """Public dense-MNA assembly of one tile: (A, rhs) with A (2MN, 2MN).
 
@@ -567,16 +590,27 @@ def mna_system(
     c(i,j) = M*N + i*N + j — the same order `node_capacitances` in
     repro.transient.integrator flattens to, so the transient dense oracle
     (C dv/dt = rhs - A v) can be built directly from these stamps.
+    Optional `stamps` add the companion model of one implicit step.
     """
-    return _mna_matrix(jnp.asarray(g), jnp.asarray(v_in), cp)
+    return _mna_matrix(jnp.asarray(g), jnp.asarray(v_in), cp, stamps)
 
 
-def solve_dense_mna(g: jax.Array, v_in: jax.Array, cp: CircuitParams) -> CrossbarSolution:
-    """Oracle: full MNA solve of one tile. g: (M, N), v_in: (M,)."""
+def solve_dense_mna(
+    g: jax.Array,
+    v_in: jax.Array,
+    cp: CircuitParams,
+    stamps: "Stamps | None" = None,
+) -> CrossbarSolution:
+    """Oracle: full MNA solve of one tile. g: (M, N), v_in: (M,).
+
+    With `stamps`, solves the companion system of one implicit transient
+    step instead of the DC operating point (`Stamps.v_init` is ignored —
+    the dense solve needs no warm start).
+    """
     g = jnp.asarray(g)
     v_in = jnp.asarray(v_in)
     m, n = g.shape
-    a, rhs = _mna_matrix(g, v_in, cp)
+    a, rhs = _mna_matrix(g, v_in, cp, stamps)
     x = jnp.linalg.solve(a, rhs)
     vr = x[: m * n].reshape(m, n)
     vc = x[m * n :].reshape(m, n)

@@ -1,0 +1,75 @@
+"""repro.spice — SPICE netlist interchange.
+
+Parse SPICE text into a `Circuit` IR, print it back canonically, lower
+crossbar netlists onto the MNA solver structures, and (optionally)
+differentially check everything against a real ngspice binary.
+
+Typical imports:
+
+    from repro.spice import parse_netlist, parse_files, emit
+    from repro.spice import lower_crossbar, lower_network, solve_dc
+    from repro.spice.oracle import find_ngspice, run_ngspice
+"""
+from repro.spice.emitter import emit, emit_card, fmt
+from repro.spice.ir import (
+    BehavioralSource,
+    Capacitor,
+    Card,
+    Circuit,
+    Comment,
+    Directive,
+    Instance,
+    ISource,
+    Resistor,
+    Subckt,
+    Title,
+    VSource,
+    spice_number,
+)
+from repro.spice.lower import (
+    DCOperatingPoint,
+    LoweredCrossbar,
+    LoweredLayer,
+    LoweredNetwork,
+    NonCrossbarError,
+    UnsupportedElementError,
+    flatten,
+    lower,
+    lower_crossbar,
+    lower_network,
+    solve_dc,
+)
+from repro.spice.parser import ParseError, parse_files, parse_netlist
+
+__all__ = [
+    "BehavioralSource",
+    "Capacitor",
+    "Card",
+    "Circuit",
+    "Comment",
+    "DCOperatingPoint",
+    "Directive",
+    "ISource",
+    "Instance",
+    "LoweredCrossbar",
+    "LoweredLayer",
+    "LoweredNetwork",
+    "NonCrossbarError",
+    "ParseError",
+    "Resistor",
+    "Subckt",
+    "Title",
+    "UnsupportedElementError",
+    "VSource",
+    "emit",
+    "emit_card",
+    "flatten",
+    "fmt",
+    "lower",
+    "lower_crossbar",
+    "lower_network",
+    "parse_files",
+    "parse_netlist",
+    "solve_dc",
+    "spice_number",
+]

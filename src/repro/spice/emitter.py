@@ -1,0 +1,75 @@
+"""Canonical SPICE printer for the Circuit IR.
+
+One printer serves both directions of the interchange: the netlist
+generator (`core.netlist.map_layer` / `map_imac`) builds IR cards and
+prints them here, and anything parsed by `repro.spice.parser` re-prints
+through the same code — which is what makes ``emit -> parse -> emit``
+byte-stable (and a single round trip canonicalizing for third-party
+netlists).
+
+Numbers print with ``%.6g`` (`fmt`), the project-wide SPICE significant
+precision; parsing a ``%.6g`` string and re-printing it reproduces the
+string exactly, so resistor values survive any number of round trips.
+"""
+from __future__ import annotations
+
+from repro.spice.ir import (
+    BehavioralSource,
+    Capacitor,
+    Card,
+    Circuit,
+    Comment,
+    Directive,
+    Instance,
+    ISource,
+    Resistor,
+    Subckt,
+    Title,
+    VSource,
+)
+
+
+def fmt(x: float) -> str:
+    """Canonical SPICE number formatting (6 significant digits)."""
+    return f"{x:.6g}"
+
+
+def emit_card(card: Card) -> "list[str]":
+    """Print one card as netlist lines (a Subckt spans several)."""
+    if isinstance(card, Comment):
+        return [f"*{card.text}"]
+    if isinstance(card, Title):
+        return [card.text]
+    if isinstance(card, (Resistor, Capacitor)):
+        return [f"{card.name} {card.n1} {card.n2} {fmt(card.value)}"]
+    if isinstance(card, VSource):
+        if card.pwl is not None:
+            pts = " ".join(f"{fmt(t)} {fmt(v)}" for t, v in card.pwl)
+            return [f"{card.name} {card.npos} {card.nneg} PWL({pts})"]
+        return [f"{card.name} {card.npos} {card.nneg} DC {fmt(card.dc or 0.0)}"]
+    if isinstance(card, ISource):
+        return [f"{card.name} {card.npos} {card.nneg} DC {fmt(card.dc)}"]
+    if isinstance(card, BehavioralSource):
+        return [f"{card.name} {card.npos} {card.nneg} VALUE={{{card.expr}}}"]
+    if isinstance(card, Instance):
+        nodes = " ".join(card.nodes)
+        return [f"{card.name} {nodes} {card.subckt}"]
+    if isinstance(card, Directive):
+        if card.args:
+            return [f".{card.name} {' '.join(card.args)}"]
+        return [f".{card.name}"]
+    if isinstance(card, Subckt):
+        lines = [f".SUBCKT {card.name} {' '.join(card.ports)}"]
+        for inner in card.cards:
+            lines.extend(emit_card(inner))
+        lines.append(f".ENDS {card.name}")
+        return lines
+    raise TypeError(f"cannot emit {type(card).__name__}")
+
+
+def emit(circuit: Circuit) -> str:
+    """Print a whole circuit; every line newline-terminated."""
+    lines: "list[str]" = []
+    for card in circuit.cards:
+        lines.extend(emit_card(card))
+    return "\n".join(lines) + "\n" if lines else ""

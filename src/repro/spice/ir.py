@@ -1,0 +1,224 @@
+"""Circuit IR — the common representation of SPICE netlists.
+
+Every netlist in the project flows through this IR: `core.netlist`
+*builds* it (map_layer / map_imac emit by constructing cards and
+printing them with `repro.spice.emitter`), `repro.spice.parser` *parses*
+text back into it, and `repro.spice.lower` turns it into the crossbar
+MNA structure the JAX solver backends consume. Because generation and
+parsing share one printer, ``emit -> parse -> emit`` is byte-stable for
+everything the framework produces, and third-party netlists converge to
+the canonical form after one round trip.
+
+The IR is deliberately card-shaped (one dataclass per SPICE card kind)
+rather than graph-shaped: order and comments are preserved, so the IR
+can reproduce a file exactly, while `Circuit` offers the indexed views
+(elements by kind, subckt registry, directive lookup) the lowering and
+the oracle need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterator, Optional, Tuple, Union
+
+#: PWL breakpoints: ((t0, v0), (t1, v1), ...) seconds/volts.
+PwlPoints = Tuple[Tuple[float, float], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Comment:
+    """A full-line comment; `text` is everything after the leading '*'."""
+
+    text: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Title:
+    """A bare first line that is not a card (SPICE's title line)."""
+
+    text: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Resistor:
+    name: str
+    n1: str
+    n2: str
+    value: float  # ohms
+
+
+@dataclasses.dataclass(frozen=True)
+class Capacitor:
+    name: str
+    n1: str
+    n2: str
+    value: float  # farads
+
+
+@dataclasses.dataclass(frozen=True)
+class VSource:
+    """Independent voltage source: DC level and/or PWL waveform."""
+
+    name: str
+    npos: str
+    nneg: str
+    dc: Optional[float] = None
+    pwl: Optional[PwlPoints] = None
+
+    def final_value(self) -> float:
+        """The settled drive: last PWL breakpoint, else the DC level."""
+        if self.pwl:
+            return self.pwl[-1][1]
+        return self.dc if self.dc is not None else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ISource:
+    name: str
+    npos: str
+    nneg: str
+    dc: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BehavioralSource:
+    """E-source with a VALUE={...} expression (behavioural neuron)."""
+
+    name: str
+    npos: str
+    nneg: str
+    expr: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """X card: subcircuit instantiation."""
+
+    name: str
+    nodes: Tuple[str, ...]
+    subckt: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Directive:
+    """A dot directive; args are the raw whitespace-separated tokens.
+
+    Keeping args verbatim (``("1n", "2e-08")`` not ``(1e-9, 2e-8)``)
+    makes emit byte-stable; `spice_number` converts on demand.
+    """
+
+    name: str  # canonical upper-case, without the leading dot
+    args: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Subckt:
+    """A .SUBCKT ... .ENDS definition with its body cards in order."""
+
+    name: str
+    ports: Tuple[str, ...]
+    cards: Tuple["Card", ...]
+
+    def elements(self, kind: type) -> "list":
+        return [c for c in self.cards if isinstance(c, kind)]
+
+
+Card = Union[
+    Comment,
+    Title,
+    Resistor,
+    Capacitor,
+    VSource,
+    ISource,
+    BehavioralSource,
+    Instance,
+    Directive,
+    Subckt,
+]
+
+_SUFFIX = {
+    "t": 1e12,
+    "g": 1e9,
+    "meg": 1e6,
+    "k": 1e3,
+    "mil": 25.4e-6,
+    "m": 1e-3,
+    "u": 1e-6,
+    "n": 1e-9,
+    "p": 1e-12,
+    "f": 1e-15,
+}
+
+_NUM_RE = re.compile(
+    r"^(?P<mant>[+-]?(?:\d+\.?\d*|\.\d+)(?:[eE][+-]?\d+)?)(?P<rest>[a-zA-Z]*)$"
+)
+
+
+def spice_number(tok: str) -> float:
+    """Parse a SPICE number: scale suffixes + trailing units ('20ns')."""
+    m = _NUM_RE.match(tok.strip())
+    if not m:
+        raise ValueError(f"not a SPICE number: {tok!r}")
+    val = float(m["mant"])
+    rest = m["rest"].lower()
+    if rest:
+        for suf, scale in _SUFFIX.items():  # 'meg'/'mil' before 'm'
+            if rest.startswith(suf):
+                return val * scale
+        # Bare units ('v', 'a', 'hz', 's') scale by 1.
+    return val
+
+
+@dataclasses.dataclass(frozen=True)
+class Circuit:
+    """An ordered netlist: the cards of one file (or one merged deck)."""
+
+    cards: Tuple[Card, ...]
+
+    def __iter__(self) -> Iterator[Card]:
+        return iter(self.cards)
+
+    def elements(self, kind: type) -> "list":
+        """Top-level cards of one IR type (subckt bodies not included)."""
+        return [c for c in self.cards if isinstance(c, kind)]
+
+    @property
+    def subckts(self) -> "dict[str, Subckt]":
+        return {c.name: c for c in self.cards if isinstance(c, Subckt)}
+
+    def directives(self, name: str) -> "list[Directive]":
+        name = name.upper()
+        return [
+            c
+            for c in self.cards
+            if isinstance(c, Directive) and c.name == name
+        ]
+
+    def directive(self, name: str) -> Optional[Directive]:
+        found = self.directives(name)
+        return found[0] if found else None
+
+    # -- analysis accessors -------------------------------------------------
+
+    def includes(self) -> "list[str]":
+        """Filenames of .INCLUDE directives (quotes stripped)."""
+        return [
+            d.args[0].strip("'\"") for d in self.directives("INCLUDE") if d.args
+        ]
+
+    def tran(self) -> "Optional[tuple[float, float]]":
+        """(t_step, t_stop) of the .TRAN directive, if present."""
+        d = self.directive("TRAN")
+        if d is None or len(d.args) < 2:
+            return None
+        return spice_number(d.args[0]), spice_number(d.args[1])
+
+    def option(self, key: str) -> Optional[str]:
+        """Value of an .OPTION KEY=VALUE (or '' for a bare flag)."""
+        key = key.upper()
+        for d in self.directives("OPTION"):
+            for arg in d.args:
+                k, _, v = arg.partition("=")
+                if k.upper() == key:
+                    return v
+        return None

@@ -1,0 +1,279 @@
+"""External differential oracle: run a real ngspice binary when present.
+
+The container images this repo targets usually have no SPICE binary —
+the JAX solver *is* the simulator — so everything here degrades
+gracefully: `find_ngspice()` returns None when the binary is absent and
+the test suite skips. When `ngspice` is installed (CI's optional oracle
+job apt-installs it), `run_ngspice` executes a netlist in batch mode,
+captures an ASCII rawfile of every analysis, and the parsed plots are
+compared differentially against the in-repo backends.
+
+The rawfile parser (`parse_raw`) is pure string processing and is unit
+tested with canned data regardless of whether the binary exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import shutil
+import subprocess
+import tempfile
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class NgspiceError(RuntimeError):
+    """ngspice failed to run or produced unparseable output."""
+
+
+def find_ngspice() -> Optional[str]:
+    """Path of the ngspice binary, or None. `REPRO_NGSPICE` overrides."""
+    override = os.environ.get("REPRO_NGSPICE")
+    if override:
+        return override if os.path.exists(override) else None
+    return shutil.which("ngspice")
+
+
+# ---------------------------------------------------------------------------
+# ASCII rawfile parsing.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RawPlot:
+    """One plot from an ngspice rawfile (one analysis)."""
+
+    name: str                    # Plotname, e.g. "Operating Point"
+    variables: "tuple[str, ...]"  # as printed, e.g. ("time", "v(x1_0)")
+    values: np.ndarray           # (n_points, n_vars), float64
+
+    def _index(self, name: str) -> int:
+        want = name.lower()
+        for k, var in enumerate(self.variables):
+            v = var.lower()
+            if v == want or v == f"v({want})" or v == f"i({want})":
+                return k
+        raise KeyError(
+            f"variable {name!r} not in plot {self.name!r}: "
+            f"{list(self.variables)}"
+        )
+
+    def signal(self, name: str) -> np.ndarray:
+        """Column by variable name; `x` matches both `x` and `v(x)`
+        (ngspice lowercases everything)."""
+        return self.values[:, self._index(name)]
+
+    def voltage(self, node: str) -> float:
+        """Scalar node voltage (operating-point plots)."""
+        return float(self.signal(node)[0])
+
+    def time(self) -> np.ndarray:
+        return self.signal("time")
+
+
+_HDR = re.compile(r"^(?P<key>[A-Za-z. ]+):\s*(?P<val>.*)$")
+
+
+def parse_raw(text: str) -> "list[RawPlot]":
+    """Parse an ASCII ngspice rawfile (``set filetype=ascii``).
+
+    Handles multiple plots per file (``write out.raw all``); complex
+    values keep their real part.
+    """
+    plots: "list[RawPlot]" = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        header: Dict[str, str] = {}
+        variables: List[str] = []
+        while i < len(lines):
+            line = lines[i]
+            m = _HDR.match(line)
+            if not m:
+                i += 1
+                continue
+            key = m["key"].strip().lower()
+            if key == "variables" and not m["val"].strip():
+                i += 1
+                while i < len(lines) and lines[i][:1].isspace():
+                    parts = lines[i].split()
+                    if len(parts) >= 2:
+                        variables.append(parts[1])
+                    i += 1
+                continue
+            if key == "values":
+                i += 1
+                break
+            header[key] = m["val"].strip()
+            i += 1
+        else:
+            break
+        try:
+            n_vars = int(header["no. variables"])
+            n_points = int(header["no. points"])
+        except KeyError as e:
+            raise NgspiceError(f"rawfile header missing {e}") from e
+        if len(variables) != n_vars:
+            raise NgspiceError(
+                f"rawfile lists {len(variables)} variables, header says "
+                f"{n_vars}"
+            )
+        toks: List[str] = []
+        need = n_points * (n_vars + 1)
+        while i < len(lines) and len(toks) < need:
+            if _HDR.match(lines[i]) and not lines[i][:1].isspace():
+                break
+            toks.extend(lines[i].split())
+            i += 1
+        if len(toks) < need:
+            raise NgspiceError(
+                f"rawfile plot {header.get('plotname', '?')!r}: expected "
+                f"{need} value tokens, got {len(toks)}"
+            )
+        vals = np.empty((n_points, n_vars))
+        for p in range(n_points):
+            row = toks[p * (n_vars + 1) : (p + 1) * (n_vars + 1)]
+            if int(row[0]) != p:
+                raise NgspiceError(
+                    f"rawfile point index {row[0]} != {p}"
+                )
+            vals[p] = [float(t.split(",")[0]) for t in row[1:]]
+        plots.append(
+            RawPlot(
+                name=header.get("plotname", ""),
+                variables=tuple(variables),
+                values=vals,
+            )
+        )
+    if not plots:
+        raise NgspiceError("no plots found in rawfile")
+    return plots
+
+
+# ---------------------------------------------------------------------------
+# Batch execution.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NgspiceResult:
+    plots: "tuple[RawPlot, ...]"
+    log: str
+
+    def plot(self, kind: str) -> RawPlot:
+        """First plot whose Plotname contains `kind` (case-insensitive)."""
+        for p in self.plots:
+            if kind.lower() in p.name.lower():
+                return p
+        raise KeyError(
+            f"no {kind!r} plot among {[p.name for p in self.plots]}"
+        )
+
+    def op(self) -> RawPlot:
+        return self.plot("operating point")
+
+    def tran(self) -> RawPlot:
+        return self.plot("transient")
+
+
+_END_RE = re.compile(r"^\s*\.end\s*$", re.I | re.M)
+
+_CONTROL = """.control
+set filetype=ascii
+run
+write {raw} all
+.endc
+"""
+
+
+def _instrument(main_text: str, raw_name: str) -> str:
+    """Splice the rawfile-writing .control block in front of `.end`.
+
+    The first line of the deck must be a comment or title line (ngspice
+    consumes it as the title); everything `map_imac` emits satisfies
+    this.
+    """
+    control = _CONTROL.format(raw=raw_name)
+    m = _END_RE.search(main_text)
+    if m:
+        return main_text[: m.start()] + control + main_text[m.start() :]
+    return main_text + control + ".end\n"
+
+
+def run_ngspice(
+    files: "Dict[str, str]",
+    main: "str | None" = None,
+    *,
+    ngspice: "str | None" = None,
+    timeout: float = 120.0,
+) -> NgspiceResult:
+    """Run a (multi-file) netlist through ``ngspice -b``.
+
+    `files` maps filename -> contents, the shape `map_imac` returns;
+    `main` defaults to ``imac_main.sp`` or the single entry. Every
+    analysis stated in the deck runs; the resulting plots come back
+    parsed. Raises `NgspiceError` when the binary is missing, exits
+    non-zero, times out, or writes no rawfile.
+    """
+    binary = ngspice or find_ngspice()
+    if binary is None:
+        raise NgspiceError(
+            "ngspice binary not found (install it or set REPRO_NGSPICE)"
+        )
+    if main is None:
+        if "imac_main.sp" in files:
+            main = "imac_main.sp"
+        elif len(files) == 1:
+            main = next(iter(files))
+        else:
+            raise NgspiceError(
+                f"cannot infer the main file among {sorted(files)}; pass main="
+            )
+    with tempfile.TemporaryDirectory(prefix="repro-ngspice-") as tmp:
+        for name, text in files.items():
+            if os.path.basename(name) != name:
+                raise NgspiceError(f"netlist filename {name!r} is not flat")
+            body = _instrument(text, "out.raw") if name == main else text
+            with open(os.path.join(tmp, name), "w") as fh:
+                fh.write(body)
+        cmd = [binary, "-b", "-o", "ngspice.log", main]
+        try:
+            proc = subprocess.run(
+                cmd,
+                cwd=tmp,
+                stdout=subprocess.PIPE,
+                stderr=subprocess.STDOUT,
+                timeout=timeout,
+            )
+        except subprocess.TimeoutExpired as e:
+            raise NgspiceError(
+                f"ngspice timed out after {timeout:g}s on {main}"
+            ) from e
+        log_path = os.path.join(tmp, "ngspice.log")
+        log = ""
+        if os.path.exists(log_path):
+            with open(log_path, errors="replace") as fh:
+                log = fh.read()
+        log += proc.stdout.decode(errors="replace")
+        raw_path = os.path.join(tmp, "out.raw")
+        if proc.returncode != 0 or not os.path.exists(raw_path):
+            tail = "\n".join(log.splitlines()[-25:])
+            raise NgspiceError(
+                f"ngspice exited {proc.returncode} without a rawfile; log "
+                f"tail:\n{tail}"
+            )
+        with open(raw_path, errors="replace") as fh:
+            raw = fh.read()
+    return NgspiceResult(plots=tuple(parse_raw(raw)), log=log)
+
+
+__all__ = [
+    "NgspiceError",
+    "NgspiceResult",
+    "RawPlot",
+    "find_ngspice",
+    "parse_raw",
+    "run_ngspice",
+]

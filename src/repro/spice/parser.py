@@ -1,0 +1,295 @@
+"""Tokenizer + parser: SPICE netlist text -> Circuit IR.
+
+Covers the subset the framework emits plus the common third-party forms
+needed to import external crossbar netlists:
+
+  * R / C / V / I element cards (DC levels, PWL sources) and E-sources
+    with ``VALUE={...}`` behavioural expressions;
+  * ``.SUBCKT`` / ``.ENDS`` definitions and ``X`` instantiation;
+  * dot directives (``.TRAN``, ``.OPTION``, ``.PRINT``, ``.INCLUDE``,
+    ``.OP``, ``.END``, ...) with verbatim argument tokens;
+  * unit suffixes (``10k``, ``1n``, ``3meg``, trailing units ``20ns``),
+    continuation lines (``+``), ``*`` comment lines, ``;`` / `` $``
+    end-of-line comments, and a bare title line (auto-detected when the
+    first line is not parseable as a card).
+
+Anything outside the subset raises `ParseError` with the offending line,
+so unsupported circuits fail loudly at the boundary instead of lowering
+to nonsense.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.spice.ir import (
+    BehavioralSource,
+    Capacitor,
+    Card,
+    Circuit,
+    Comment,
+    Directive,
+    Instance,
+    ISource,
+    Resistor,
+    Subckt,
+    Title,
+    VSource,
+    spice_number,
+)
+
+
+class ParseError(ValueError):
+    """A netlist line outside the supported SPICE subset."""
+
+    def __init__(self, msg: str, lineno: "int | None" = None):
+        self.lineno = lineno
+        where = f" (line {lineno})" if lineno is not None else ""
+        super().__init__(f"{msg}{where}")
+
+
+_EOL_COMMENT = re.compile(r"(;|\s\$).*$")
+
+
+def _logical_lines(text: str) -> "list[tuple[int, str]]":
+    """Assemble (lineno, text) logical lines: continuations joined,
+    end-of-line comments stripped, blanks dropped (full-line comments
+    are preserved verbatim)."""
+    out: "list[tuple[int, str]]" = []
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        line = raw.rstrip("\r")
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.startswith("*"):
+            out.append((lineno, line.lstrip()))
+            continue
+        line = _EOL_COMMENT.sub("", line).rstrip()
+        if not line.strip():
+            continue
+        if line.lstrip().startswith("+"):
+            if not out or out[-1][1].startswith("*"):
+                raise ParseError("continuation with nothing to continue", lineno)
+            prev_no, prev = out[-1]
+            out[-1] = (prev_no, prev + " " + line.lstrip()[1:].strip())
+        else:
+            out.append((lineno, line.strip()))
+    return out
+
+
+def _balance(tok: str) -> int:
+    return tok.count("(") - tok.count(")") + tok.count("{") - tok.count("}")
+
+
+def _tokens(line: str, lineno: int) -> "list[str]":
+    """Whitespace split, re-joining tokens inside (...) / {...} groups
+    (PWL point lists, VALUE expressions)."""
+    parts = line.split()
+    out: "list[str]" = []
+    depth = 0
+    for part in parts:
+        if depth > 0:
+            out[-1] += " " + part
+        elif out and out[-1].upper() in ("PWL", "VALUE=") and part.startswith("("):
+            out[-1] += part
+        else:
+            out.append(part)
+        depth += _balance(part)
+        if depth < 0:
+            raise ParseError(f"unbalanced parentheses in {line!r}", lineno)
+    if depth != 0:
+        raise ParseError(f"unbalanced parentheses in {line!r}", lineno)
+    return out
+
+
+def _parse_pwl(tok: str, lineno: int) -> "tuple[tuple[float, float], ...]":
+    inner = tok[tok.index("(") + 1 : tok.rindex(")")]
+    vals = [spice_number(t) for t in inner.split()]
+    if len(vals) < 2 or len(vals) % 2:
+        raise ParseError(f"PWL needs (t v) pairs, got {tok!r}", lineno)
+    return tuple((vals[i], vals[i + 1]) for i in range(0, len(vals), 2))
+
+
+def _parse_source(toks: "list[str]", lineno: int) -> VSource:
+    name, npos, nneg = toks[0], toks[1], toks[2]
+    rest = toks[3:]
+    dc = None
+    pwl = None
+    i = 0
+    while i < len(rest):
+        t = rest[i]
+        u = t.upper()
+        if u == "DC":
+            if i + 1 >= len(rest):
+                raise ParseError(f"{name}: DC without a value", lineno)
+            dc = spice_number(rest[i + 1])
+            i += 2
+        elif u.startswith("PWL"):
+            if "(" not in t:  # "PWL" then a merged "(...)" token
+                if i + 1 >= len(rest):
+                    raise ParseError(f"{name}: PWL without points", lineno)
+                t = t + rest[i + 1]
+                i += 1
+            pwl = _parse_pwl(t, lineno)
+            i += 1
+        elif u.startswith(("SIN", "PULSE", "EXP", "SFFM", "AC")):
+            raise ParseError(
+                f"{name}: unsupported source function {t!r} "
+                "(supported: DC, PWL)",
+                lineno,
+            )
+        else:
+            dc = spice_number(t)  # bare value == DC level
+            i += 1
+    if dc is None and pwl is None:
+        raise ParseError(f"{name}: source without DC or PWL value", lineno)
+    return VSource(name=name, npos=npos, nneg=nneg, dc=dc, pwl=pwl)
+
+
+def _parse_two_terminal(toks: "list[str]", lineno: int):
+    """R/C cards: name n1 n2 value [name=value params ignored]."""
+    if len(toks) < 4:
+        raise ParseError(f"element card too short: {' '.join(toks)!r}", lineno)
+    for extra in toks[4:]:
+        if "=" not in extra:
+            raise ParseError(
+                f"{toks[0]}: unsupported trailing token {extra!r}", lineno
+            )
+    return toks[0], toks[1], toks[2], spice_number(toks[3])
+
+
+def _parse_card(toks: "list[str]", lineno: int) -> Card:
+    kind = toks[0][0].upper()
+    if kind == "R":
+        name, n1, n2, val = _parse_two_terminal(toks, lineno)
+        return Resistor(name=name, n1=n1, n2=n2, value=val)
+    if kind == "C":
+        name, n1, n2, val = _parse_two_terminal(toks, lineno)
+        return Capacitor(name=name, n1=n1, n2=n2, value=val)
+    if kind == "V":
+        if len(toks) < 4:
+            raise ParseError(f"source card too short: {' '.join(toks)!r}", lineno)
+        return _parse_source(toks, lineno)
+    if kind == "I":
+        if len(toks) < 4:
+            raise ParseError(f"source card too short: {' '.join(toks)!r}", lineno)
+        src = _parse_source(toks, lineno)
+        if src.pwl is not None:
+            raise ParseError(f"{toks[0]}: PWL current sources unsupported", lineno)
+        return ISource(name=src.name, npos=src.npos, nneg=src.nneg, dc=src.dc)
+    if kind == "E":
+        if len(toks) != 4 or not toks[3].upper().startswith("VALUE="):
+            raise ParseError(
+                f"{toks[0]}: only 'E n+ n- VALUE={{expr}}' sources are "
+                "supported",
+                lineno,
+            )
+        expr = toks[3][len("VALUE=") :]
+        if not (expr.startswith("{") and expr.endswith("}")):
+            raise ParseError(f"{toks[0]}: VALUE expression must be braced", lineno)
+        return BehavioralSource(
+            name=toks[0], npos=toks[1], nneg=toks[2], expr=expr[1:-1]
+        )
+    if kind == "X":
+        if len(toks) < 3:
+            raise ParseError(f"instance card too short: {' '.join(toks)!r}", lineno)
+        return Instance(
+            name=toks[0], nodes=tuple(toks[1:-1]), subckt=toks[-1]
+        )
+    raise ParseError(
+        f"unsupported element card {toks[0]!r} (supported: R C V I E X)",
+        lineno,
+    )
+
+
+def parse_netlist(text: str) -> Circuit:
+    """Parse one netlist file into a `Circuit`.
+
+    A first line that is not parseable as any card is kept as a `Title`
+    (SPICE's implicit title line); files produced by this framework
+    always begin with a ``*`` comment instead.
+    """
+    lines = _logical_lines(text)
+    cards: "list[Card]" = []
+    stack: "list[tuple[str, tuple[str, ...], list[Card]]]" = []
+    first = True
+    for lineno, line in lines:
+        is_first = first
+        first = False
+        if line.startswith("*"):
+            card: Card = Comment(line[1:])
+            (stack[-1][2] if stack else cards).append(card)
+            continue
+        try:
+            toks = _tokens(line, lineno)
+            if line.startswith("."):
+                name = toks[0][1:].upper()
+                if name == "SUBCKT":
+                    if len(toks) < 2:
+                        raise ParseError(".SUBCKT without a name", lineno)
+                    stack.append((toks[1], tuple(toks[2:]), []))
+                    continue
+                if name == "ENDS":
+                    if not stack:
+                        raise ParseError(".ENDS without .SUBCKT", lineno)
+                    sname, ports, body = stack.pop()
+                    if len(toks) > 1 and toks[1] != sname:
+                        raise ParseError(
+                            f".ENDS {toks[1]} does not close .SUBCKT {sname}",
+                            lineno,
+                        )
+                    sub = Subckt(name=sname, ports=ports, cards=tuple(body))
+                    (stack[-1][2] if stack else cards).append(sub)
+                    continue
+                card = Directive(name=name, args=tuple(toks[1:]))
+            else:
+                card = _parse_card(toks, lineno)
+        except (ParseError, ValueError) as e:
+            if is_first:
+                cards.append(Title(line))
+                continue
+            if isinstance(e, ParseError):
+                raise
+            raise ParseError(str(e), lineno) from e
+        (stack[-1][2] if stack else cards).append(card)
+    if stack:
+        raise ParseError(f".SUBCKT {stack[-1][0]} never closed by .ENDS")
+    return Circuit(cards=tuple(cards))
+
+
+def parse_files(
+    files: "dict[str, str]", main: "str | None" = None
+) -> Circuit:
+    """Parse a multi-file netlist dict, resolving ``.INCLUDE`` in place.
+
+    `files` maps filename -> contents (the shape `core.netlist.map_imac`
+    returns). `main` names the top file; defaults to ``imac_main.sp``
+    when present, else the single entry.
+    """
+    if main is None:
+        if "imac_main.sp" in files:
+            main = "imac_main.sp"
+        elif len(files) == 1:
+            main = next(iter(files))
+        else:
+            raise ParseError(
+                f"cannot infer the main file among {sorted(files)}; pass main="
+            )
+
+    def resolve(name: str, seen: "tuple[str, ...]") -> "tuple[Card, ...]":
+        if name in seen:
+            raise ParseError(f"circular .INCLUDE of {name!r}")
+        try:
+            text = files[name]
+        except KeyError:
+            raise ParseError(
+                f".INCLUDE {name!r} not found among {sorted(files)}"
+            ) from None
+        out: "list[Card]" = []
+        for card in parse_netlist(text).cards:
+            if isinstance(card, Directive) and card.name == "INCLUDE":
+                out.extend(resolve(card.args[0].strip("'\""), seen + (name,)))
+            else:
+                out.append(card)
+        return tuple(out)
+
+    return Circuit(cards=resolve(main, ()))

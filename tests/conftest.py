@@ -1,9 +1,32 @@
 """Shared test fixtures. NOTE: no XLA_FLAGS device-count override here —
 smoke tests and benches must see the single real CPU device; only
 launch/dryrun.py fakes 512 devices (in its own process)."""
+import os
+
 import jax
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    # Deterministic fuzzing: CI runs are derandomized (seed derived from the
+    # test name, so failures reproduce across runs); local runs explore but
+    # print a reproduction blob. JIT warm-up makes the default 200 ms
+    # deadline flaky, so it is bounded but generous, and the example
+    # database is disabled to keep runs hermetic.
+    settings.register_profile(
+        "repro",
+        max_examples=25,
+        derandomize=bool(os.environ.get("CI")),
+        print_blob=True,
+        database=None,
+        deadline=60_000,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro")
+except ImportError:  # pragma: no cover - hypothesis is optional
+    pass
 
 
 @pytest.fixture(scope="session")

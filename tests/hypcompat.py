@@ -1,0 +1,59 @@
+"""Guarded hypothesis import for environments without the package.
+
+The CI test extra installs hypothesis (`pip install -e .[test]`), but
+bare containers may not have it; property-based tests import `given` /
+`settings` / `st` from here so that, when hypothesis is missing, they
+collect as skipped instead of erroring at import time. Every fuzz
+property keeps a fixed-example parametrized twin that runs everywhere.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, assume, given, seed, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the dep
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def seed(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def assume(_condition):
+        return True
+
+    class _AnyStrategy:
+        """Stands in for `hypothesis.strategies` at decoration time."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+    HealthCheck = None
+
+__all__ = [
+    "HAVE_HYPOTHESIS",
+    "HealthCheck",
+    "assume",
+    "given",
+    "seed",
+    "settings",
+    "st",
+]

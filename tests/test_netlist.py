@@ -3,6 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypcompat import given, seed, settings, st
+
 from repro.core.devices import MRAM
 from repro.core.imac import IMACConfig, build_plans
 from repro.core.mapping import map_network
@@ -101,3 +103,62 @@ def test_netlist_stats(small_net):
     )
     text = files["layer0.sp"] + files["layer1.sp"]
     assert text.count("Rmem_") == n_devices
+
+
+# ---------------------------------------------------------------------------
+# Round-trip properties through the repro.spice interchange: generation
+# and parsing share one IR printer, so emit -> parse -> emit must be
+# byte-stable and structure-preserving for every generated deck.
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_files(files):
+    from repro.spice import emit, parse_netlist
+
+    reemitted = {n: emit(parse_netlist(t)) for n, t in files.items()}
+    assert reemitted == files, "emit -> parse -> emit not byte-stable"
+    assert netlist_stats(reemitted) == netlist_stats(files)
+
+
+def test_roundtrip_byte_stable(small_net):
+    cfg, mapped, plans = small_net
+    _roundtrip_files(map_imac(mapped, plans, cfg, sample=np.linspace(0, 1, 6)))
+
+
+def test_roundtrip_byte_stable_transient(small_net):
+    from repro.transient.spec import TransientSpec
+
+    cfg, mapped, plans = small_net
+    _roundtrip_files(
+        map_imac(
+            mapped,
+            plans,
+            cfg,
+            sample=np.linspace(0, 1, 6),
+            transient=TransientSpec(t_stop=2e-9, n_steps=8, method="be"),
+        )
+    )
+
+
+@seed(2029)
+@given(
+    sample=st.lists(
+        st.floats(min_value=0.0, max_value=1.0), min_size=6, max_size=6
+    ),
+    use_tran=st.booleans(),
+)
+@settings(max_examples=15)
+def test_fuzz_roundtrip_over_samples(small_net, sample, use_tran):
+    """Property: byte stability and stats invariance hold for arbitrary
+    input drives, DC and transient decks alike."""
+    cfg, mapped, plans = small_net
+    spec = None
+    if use_tran:
+        from repro.transient.spec import TransientSpec
+
+        spec = TransientSpec(t_stop=2e-9, n_steps=8)
+    _roundtrip_files(
+        map_imac(
+            mapped, plans, cfg, sample=np.asarray(sample), transient=spec
+        )
+    )

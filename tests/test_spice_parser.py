@@ -1,0 +1,322 @@
+"""Unit tests for the SPICE tokenizer/parser/emitter (repro.spice)."""
+import pytest
+
+from repro.spice import (
+    BehavioralSource,
+    Capacitor,
+    Circuit,
+    Comment,
+    Directive,
+    Instance,
+    ISource,
+    ParseError,
+    Resistor,
+    Subckt,
+    Title,
+    VSource,
+    emit,
+    fmt,
+    parse_files,
+    parse_netlist,
+    spice_number,
+)
+
+
+# ---------------------------------------------------------------------------
+# spice_number
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "tok,want",
+    [
+        ("10k", 1e4),
+        ("1n", 1e-9),
+        ("3meg", 3e6),
+        ("2.2u", 2.2e-6),
+        ("5MIL", 5 * 25.4e-6),
+        ("1.5T", 1.5e12),
+        ("4g", 4e9),
+        ("7p", 7e-12),
+        ("9f", 9e-15),
+        ("-3m", -3e-3),
+        ("20ns", 2e-8),  # scale suffix + trailing unit
+        ("0.5V", 0.5),  # bare unit, no scaling
+        ("1e-3", 1e-3),
+        ("+.25", 0.25),
+        ("1E6", 1e6),
+    ],
+)
+def test_spice_number(tok, want):
+    assert spice_number(tok) == pytest.approx(want, rel=1e-12)
+
+
+@pytest.mark.parametrize("tok", ["", "k10", "1..2", "ten", "1 0"])
+def test_spice_number_rejects(tok):
+    with pytest.raises(ValueError):
+        spice_number(tok)
+
+
+# ---------------------------------------------------------------------------
+# logical lines: continuations, comments, title
+# ---------------------------------------------------------------------------
+
+
+def test_continuation_lines_joined():
+    circ = parse_netlist("* t\nR1 a b\n+ 10k\n")
+    (r,) = circ.elements(Resistor)
+    assert (r.n1, r.n2, r.value) == ("a", "b", 1e4)
+
+
+def test_continuation_without_prior_card():
+    with pytest.raises(ParseError, match="continuation"):
+        parse_netlist("* only a comment\n+ 10k\n")
+
+
+def test_eol_comments_stripped():
+    circ = parse_netlist("* t\nR1 a b 1k ; a comment\nR2 b 0 2k $ another\n")
+    r1, r2 = circ.elements(Resistor)
+    assert r1.value == 1e3 and r2.value == 2e3
+
+
+def test_full_line_comments_preserved():
+    text = "* header\nR1 a 0 1000\n* trailer\n"
+    circ = parse_netlist(text)
+    assert [c.text for c in circ.elements(Comment)] == [" header", " trailer"]
+    assert emit(circ) == text
+
+
+def test_title_line_autodetected():
+    circ = parse_netlist("my divider circuit\nR1 a 0 1k\n")
+    assert isinstance(circ.cards[0], Title)
+    assert circ.cards[0].text == "my divider circuit"
+    # A later unparseable line is an error, not a title.
+    with pytest.raises(ParseError):
+        parse_netlist("R1 a 0 1k\nnot a card\n")
+
+
+def test_blank_lines_dropped():
+    circ = parse_netlist("* t\n\nR1 a 0 1k\n\n\nR2 a 0 2k\n")
+    assert len(circ.elements(Resistor)) == 2
+
+
+# ---------------------------------------------------------------------------
+# element cards
+# ---------------------------------------------------------------------------
+
+
+def test_source_forms():
+    circ = parse_netlist(
+        "* sources\n"
+        "V1 a 0 DC 0.8\n"
+        "V2 b 0 1.5\n"
+        "V3 c 0 PWL(0 0 1n 0.5)\n"
+        "V4 d 0 PWL (0 0 2n 0.25 4n 0.25)\n"
+        "I1 e 0 DC 1m\n"
+    )
+    v1, v2, v3, v4 = circ.elements(VSource)
+    assert v1.dc == 0.8 and v1.pwl is None
+    assert v2.dc == 1.5  # bare value == DC
+    assert v3.pwl == ((0.0, 0.0), (1e-9, 0.5)) and v3.final_value() == 0.5
+    assert v4.pwl[-1] == (4e-9, 0.25)  # split "PWL" "(...)" tokens merge
+    (i1,) = circ.elements(ISource)
+    assert i1.dc == 1e-3
+
+
+@pytest.mark.parametrize(
+    "card,msg",
+    [
+        ("V1 a 0 SIN(0 1 1k)", "unsupported source function"),
+        ("V1 a 0 PULSE(0 1 0 1n)", "unsupported source function"),
+        ("V1 a 0", "too short"),
+        ("V1 a 0 DC", "DC without a value"),
+        ("V1 a 0 PWL(0 0 1n)", "pairs"),
+        ("I1 a 0 PWL(0 0 1n 1m)", "PWL current sources"),
+        ("R1 a 0", "too short"),
+        ("R1 a b 1k junk", "unsupported trailing token"),
+        ("M1 d g s b nmos", "unsupported element card"),
+        ("E1 out 0 bad", "VALUE="),
+        ("E1 out 0 VALUE=unbraced", "braced"),
+        ("R1 a b ((1k", "unbalanced parentheses"),
+    ],
+)
+def test_parse_errors(card, msg):
+    with pytest.raises(ParseError, match=msg):
+        parse_netlist(f"* t\n{card}\n")
+
+
+def test_parse_error_reports_lineno():
+    with pytest.raises(ParseError, match=r"line 3"):
+        parse_netlist("* one\nR1 a 0 1k\nM1 d g s b nmos\n")
+
+
+def test_trailing_params_ignored():
+    circ = parse_netlist("* t\nR1 a b 1k TC1=0.001 W=1u\n")
+    (r,) = circ.elements(Resistor)
+    assert r.value == 1e3
+
+
+def test_behavioral_source_with_spaces():
+    circ = parse_netlist("* t\nEneur_0 out 0 VALUE={max(0, (v(a) + 1)*2)}\n")
+    (e,) = circ.elements(BehavioralSource)
+    assert e.expr == "max(0, (v(a) + 1)*2)"
+    assert emit_line(circ, "Eneur_0") == "Eneur_0 out 0 VALUE={max(0, (v(a) + 1)*2)}"
+
+
+def emit_line(circ: Circuit, name: str) -> str:
+    for line in emit(circ).splitlines():
+        if line.startswith(name + " "):
+            return line
+    raise AssertionError(f"{name} not emitted")
+
+
+def test_instance_card():
+    circ = parse_netlist("* t\nXlayer0 in_0 in_1 out_0 layer0\n")
+    (x,) = circ.elements(Instance)
+    assert x.nodes == ("in_0", "in_1", "out_0") and x.subckt == "layer0"
+
+
+def test_capacitor_card():
+    circ = parse_netlist("* t\nCload out 0 10f\n")
+    (c,) = circ.elements(Capacitor)
+    assert c.value == pytest.approx(1e-14, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# subcircuits + directives
+# ---------------------------------------------------------------------------
+
+
+SUB = """* demo
+.SUBCKT div a b
+R1 a mid 1000
+R2 mid b 1000
+.ENDS div
+Xd in 0 div
+V1 in 0 DC 1
+.OP
+.END
+"""
+
+
+def test_subckt_parsing():
+    circ = parse_netlist(SUB)
+    sub = circ.subckts["div"]
+    assert sub.ports == ("a", "b")
+    assert len(sub.elements(Resistor)) == 2
+    # Subckt bodies don't leak into top-level element views.
+    assert circ.elements(Resistor) == []
+    assert emit(circ) == SUB
+
+
+@pytest.mark.parametrize(
+    "text,msg",
+    [
+        ("* t\n.SUBCKT a p\nR1 p 0 1k\n", "never closed"),
+        ("* t\n.ENDS foo\n", r"\.ENDS without"),
+        ("* t\n.SUBCKT a p\nR1 p 0 1k\n.ENDS b\n", "does not close"),
+        ("* t\n.SUBCKT\n", r"\.SUBCKT without a name"),
+    ],
+)
+def test_subckt_errors(text, msg):
+    with pytest.raises(ParseError, match=msg):
+        parse_netlist(text)
+
+
+def test_nested_subckt_cards():
+    circ = parse_netlist(
+        "* t\n.SUBCKT outer p\n.SUBCKT inner q\nR1 q 0 1\n.ENDS inner\n"
+        "Xi p inner\n.ENDS outer\n"
+    )
+    outer = circ.subckts["outer"]
+    inner = [c for c in outer.cards if isinstance(c, Subckt)]
+    assert len(inner) == 1 and inner[0].name == "inner"
+
+
+def test_directive_accessors():
+    circ = parse_netlist(
+        "* t\n.OPTION POST\n.OPTION METHOD=GEAR\n.TRAN 1n 20ns\n"
+        ".INCLUDE 'layer0.sp'\n.END\n"
+    )
+    assert circ.option("METHOD") == "GEAR"
+    assert circ.option("POST") == ""
+    assert circ.option("MISSING") is None
+    assert circ.tran() == (1e-9, 2e-8)
+    assert circ.includes() == ["layer0.sp"]
+    assert circ.directive("END") == Directive(name="END")
+    assert circ.directive("NOSUCH") is None
+
+
+def test_tran_absent():
+    assert parse_netlist("* t\nR1 a 0 1k\n").tran() is None
+
+
+# ---------------------------------------------------------------------------
+# multi-file / .INCLUDE resolution
+# ---------------------------------------------------------------------------
+
+
+def test_parse_files_resolves_includes():
+    files = {
+        "imac_main.sp": "* main\n.INCLUDE 'sub.sp'\nV1 in 0 DC 1\n.END\n",
+        "sub.sp": "* sub\nR1 in 0 1k\n",
+    }
+    circ = parse_files(files)
+    assert len(circ.elements(Resistor)) == 1
+    assert circ.includes() == []  # spliced, not kept
+
+
+def test_parse_files_main_inference():
+    with pytest.raises(ParseError, match="cannot infer"):
+        parse_files({"a.sp": "* a\n", "b.sp": "* b\n"})
+    # A single file needs no main.
+    circ = parse_files({"only.sp": "* x\nR1 a 0 1\n"})
+    assert len(circ.elements(Resistor)) == 1
+
+
+def test_parse_files_missing_include():
+    with pytest.raises(ParseError, match="not found"):
+        parse_files({"imac_main.sp": "* m\n.INCLUDE 'gone.sp'\n"})
+
+
+def test_parse_files_cycle():
+    files = {
+        "imac_main.sp": "* m\n.INCLUDE 'a.sp'\n",
+        "a.sp": "* a\n.INCLUDE 'imac_main.sp'\n",
+    }
+    with pytest.raises(ParseError, match="circular"):
+        parse_files(files)
+
+
+# ---------------------------------------------------------------------------
+# canonicalization
+# ---------------------------------------------------------------------------
+
+
+MESSY = """my title line
+r1   a    b   10K   ; series
++ TC1=0.01
+V1 a 0
++ PWL (0 0
++ 1n 0.5)
+.subckt buf x y
+Rb x y 1meg
+.ends
+Xb b out buf
+.end
+"""
+
+
+def test_third_party_netlist_canonicalizes():
+    """One round trip canonicalizes; further trips are byte-stable."""
+    once = emit(parse_netlist(MESSY))
+    twice = emit(parse_netlist(once))
+    assert once == twice
+    assert "R1 a b 10000" not in once  # %.6g: value prints as 10000
+    assert "r1 a b 10000" in once
+    assert "PWL(0 0 1e-09 0.5)" in once
+
+
+def test_fmt_round_trip_stability():
+    for x in (13.8182, 1e-9, 2.5e-10, 0.123456789, 97531.2468):
+        assert fmt(spice_number(fmt(x))) == fmt(x)
