@@ -1,0 +1,101 @@
+"""CI assertion helper for the observability exports.
+
+Parses a Prometheus text exposition and a Chrome trace_event JSON
+produced by ``benchmarks.run --trace --metrics-out`` and asserts the
+layer actually observed the run:
+
+  * the Prometheus file parses (``# TYPE`` lines + ``name{labels} value``
+    samples only) and contains the key series;
+  * the trace is valid trace_event JSON with complete ("X") spans,
+    including at least one compile-phase and one steady-state
+    ``solve_chunk`` span.
+
+Usage: python -m benchmarks.check_obs METRICS.prom TRACE.json
+Exits non-zero with a message on the first missing invariant.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+REQUIRED_SERIES = (
+    "solver_sweeps",
+    "cache_hits_total",
+    "backend_fallback_total",
+)
+
+_SAMPLE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})? (-?[0-9.e+-]+|\+Inf|NaN)$"
+)
+
+
+def parse_prometheus(text: str) -> "dict[str, list[str]]":
+    """Parse a text exposition; returns {metric family: sample lines}.
+
+    Raises ValueError on any line that is neither a comment nor a valid
+    sample — the format check CI relies on.
+    """
+    families: "dict[str, list[str]]" = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip() or line.startswith("#"):
+            continue
+        m = _SAMPLE.match(line)
+        if not m:
+            raise ValueError(f"line {lineno} is not a valid sample: {line!r}")
+        name = m.group(1)
+        # _bucket/_sum/_count samples belong to their histogram family.
+        family = re.sub(r"_(bucket|sum|count)$", "", name)
+        families.setdefault(family, []).append(line)
+        families.setdefault(name, []).append(line)
+    return families
+
+
+def check_metrics(path: str) -> None:
+    with open(path) as fh:
+        families = parse_prometheus(fh.read())
+    missing = [s for s in REQUIRED_SERIES if s not in families]
+    if missing:
+        raise SystemExit(
+            f"metrics export {path} is missing key series: {missing}; "
+            f"present: {sorted(k for k in families if '_bucket' not in k)}"
+        )
+    print(f"ok: {path} parses; key series present: {REQUIRED_SERIES}")
+
+
+def check_trace(path: str) -> None:
+    with open(path) as fh:
+        trace = json.load(fh)
+    events = trace["traceEvents"]
+    complete = [e for e in events if e.get("ph") == "X"]
+    if not complete:
+        raise SystemExit(f"trace {path} has no complete ('X') spans")
+    for e in complete:
+        for field in ("name", "ts", "dur", "pid", "tid"):
+            if field not in e:
+                raise SystemExit(f"span missing {field!r}: {e}")
+    names = {e["name"] for e in complete}
+    if "solve_chunk[compile]" not in names:
+        raise SystemExit(
+            f"trace {path} has no solve_chunk[compile] span; got {sorted(names)}"
+        )
+    if "solve_chunk[run]" not in names:
+        raise SystemExit(
+            f"trace {path} has no steady-state solve_chunk[run] span; "
+            f"got {sorted(names)}"
+        )
+    print(
+        f"ok: {path} has {len(complete)} spans incl. compile/run "
+        f"solve_chunk split"
+    )
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        raise SystemExit(__doc__)
+    check_metrics(sys.argv[1])
+    check_trace(sys.argv[2])
+
+
+if __name__ == "__main__":
+    main()

@@ -15,32 +15,79 @@ and, per selected bench, writes the same rows plus run metadata to
   deploy      — IMAC deployment planning for the 10 assigned archs
   roofline    — (arch x shape x mesh) roofline table from dry-run artifacts
 
+Observability (repro.obs): ``--trace FILE`` enables the tracer and
+writes a Chrome trace_event JSON (load in chrome://tracing or Perfetto);
+``--metrics-out FILE`` enables metrics and writes the Prometheus text
+exposition. Either flag also embeds the metrics snapshot in each
+``BENCH_<name>.json``.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table3,table4,...]
+           [--trace trace.json] [--metrics-out metrics.prom]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import platform
+import subprocess
 import sys
 import traceback
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
+#: BENCH_<name>.json schema: bumped when the payload layout changes.
+#: v2 adds run metadata (git SHA, jax/device/python) and the optional
+#: embedded repro.obs metrics snapshot.
+SCHEMA_VERSION = 2
 
-def _write_json(name: str, rows, ok: bool) -> None:
-    """Snapshot one bench's emitted rows as BENCH_<name>.json."""
+
+def _git_sha() -> str:
+    try:
+        return (
+            subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                cwd=REPO_ROOT,
+                capture_output=True,
+                text=True,
+                timeout=10,
+            ).stdout.strip()
+            or "unknown"
+        )
+    except Exception:
+        return "unknown"
+
+
+def _metadata() -> dict:
     import jax
+
+    devices = jax.devices()
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "device_platform": devices[0].platform if devices else "none",
+        "device_count": len(devices),
+        "python_version": platform.python_version(),
+    }
+
+
+def _write_json(name: str, rows, ok: bool, meta: dict) -> None:
+    """Snapshot one bench's emitted rows as BENCH_<name>.json."""
+    from repro import obs
 
     payload = {
         "bench": name,
         "ok": ok,
-        "jax_backend": jax.default_backend(),
+        **meta,
         "rows": [
             {"name": n, "us_per_call": us, "derived": derived}
             for n, us, derived in rows
         ],
     }
+    if obs.enabled():
+        payload["metrics"] = obs.snapshot()
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2)
@@ -50,7 +97,24 @@ def _write_json(name: str, rows, ok: bool) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="FILE",
+        help="enable repro.obs and write a Chrome trace_event JSON",
+    )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="FILE",
+        help="enable repro.obs and write a Prometheus text exposition",
+    )
     args = ap.parse_args()
+
+    from repro import obs
+
+    if args.trace or args.metrics_out:
+        obs.enable()
 
     from benchmarks import (
         deploy_report,
@@ -80,17 +144,25 @@ def main() -> None:
     )
     from benchmarks import common
 
+    meta = _metadata()
     print("name,us_per_call,derived")
     failures = []
     for name in selected:
         start = len(common.CSV_ROWS)
         try:
-            benches[name]()
-            _write_json(name, common.CSV_ROWS[start:], ok=True)
+            with obs.trace(f"bench[{name}]"):
+                benches[name]()
+            _write_json(name, common.CSV_ROWS[start:], ok=True, meta=meta)
         except Exception as e:  # keep the harness going; report at exit
             traceback.print_exc()
             failures.append((name, repr(e)))
-            _write_json(name, common.CSV_ROWS[start:], ok=False)
+            _write_json(name, common.CSV_ROWS[start:], ok=False, meta=meta)
+    if args.trace:
+        obs.export_chrome_trace(args.trace)
+        print(f"# trace written to {args.trace}", file=sys.stderr)
+    if args.metrics_out:
+        obs.export_prometheus_file(args.metrics_out)
+        print(f"# metrics written to {args.metrics_out}", file=sys.stderr)
     if failures:
         print(f"FAILED benches: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import tempfile
 import time
 
 import jax
@@ -175,6 +176,32 @@ def run():
         f"x={speedup_lean:.2f};acc_delta={d_acc_lean:.2e};"
         f"pow_rel_delta={d_pow_lean:.2e}",
     )
+    # Memoization: the same sweep against a cold then warm ResultCache.
+    # The warm pass returns every point from disk (cache_hits_total in
+    # the repro.obs export equals the grid size) without a single solve.
+    from repro.explore.cache import ResultCache
+
+    with tempfile.TemporaryDirectory() as tmp:
+        rcache = ResultCache(tmp)
+        # Two chunks per solve so the steady-state (second) chunk shows
+        # up as a distinct solve_chunk[run] span in traced runs.
+        ch = max(1, n // 2)
+        t0 = time.perf_counter()
+        run_sweep(params, xte, yte, items, n_samples=n, chunk=ch, cache=rcache)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = run_sweep(
+            params, xte, yte, items, n_samples=n, chunk=ch, cache=rcache
+        )
+        t_warm = time.perf_counter() - t0
+        emit(
+            "sweep/cache_warm_rerun",
+            t_warm / len(items) * 1e6,
+            f"total_s={t_warm:.3f};cold_s={t_cold:.2f};"
+            f"hits={rcache.hits};misses={rcache.misses};"
+            f"all_cached={all(r.cached for r in warm)}",
+        )
+
     front = pareto_front(batched)
     emit("sweep/pareto_front", 0.0, ";".join(batched[i].name for i in front))
     if speedup_seed < 3.0:

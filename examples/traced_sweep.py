@@ -1,0 +1,88 @@
+"""Observability walkthrough: trace a small Table III sweep end to end.
+
+Enables `repro.obs`, runs a subarray-size sweep twice against the same
+on-disk result cache (cold then warm), and prints:
+
+  * the span tree — run_sweep > memo_lookup / group[i] >
+    evaluate_batch > map / stamp / solve (with the first solve split
+    into solve_chunk[compile] vs solve_chunk[run]) / measure;
+  * solver convergence stats (sweeps-to-converge and final-residual
+    histograms) straight from the metrics registry;
+  * cache hit/miss counters showing the warm rerun never touched the
+    solver.
+
+Artifacts land in artifacts/: a Chrome trace_event JSON (open in
+chrome://tracing or https://ui.perfetto.dev) and a Prometheus text file.
+
+Run:  PYTHONPATH=src python examples/traced_sweep.py [--samples 16]
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+
+from repro import obs
+from repro.configs.imac_mnist import TOPOLOGY
+from repro.core import IMACConfig
+from repro.core.digital import train_mlp
+from repro.data.digits import train_test_split
+from repro.explore import SweepSpec, run_sweep
+from repro.explore.cache import ResultCache
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=16)
+    ap.add_argument("--sizes", default="32,64")
+    ap.add_argument("--techs", default="MRAM,RRAM")
+    ap.add_argument("--out-dir", default="artifacts")
+    args = ap.parse_args()
+
+    obs.enable()
+
+    xtr, ytr, xte, yte = train_test_split(2000, 200, seed=0, noise=0.4)
+    params = train_mlp(jax.random.PRNGKey(0), TOPOLOGY, xtr, ytr, steps=200)
+
+    sizes = [int(s) for s in args.sizes.split(",")]
+    spec = SweepSpec.grid(
+        IMACConfig(), array_size=sizes, tech=args.techs.split(",")
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = ResultCache(tmp)
+        kw = dict(n_samples=args.samples, chunk=args.samples, cache=cache)
+        run_sweep(params, xte, yte, spec, **kw)     # cold: all misses
+        run_sweep(params, xte, yte, spec, **kw)     # warm: all hits
+        hits, misses = cache.hits, cache.misses
+
+    print("=== span tree ===")
+    print(obs.span_tree())
+
+    print("\n=== cache ===")
+    print(f"misses (cold pass): {misses}")
+    print(f"hits   (warm pass): {hits}")
+
+    print("\n=== solver convergence ===")
+    snap = obs.snapshot()
+    for name in ("solver_sweeps", "solver_residual"):
+        series = snap.get(name, {}).get("series", [])
+        for s in series:
+            filled = [
+                (b["le"], b["count"]) for b in s["buckets"] if b["count"]
+            ]
+            print(
+                f"{name}: count={s['count']} sum={s['sum']:.3g} "
+                f"first_filled_buckets={filled[:4]}"
+            )
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    trace_path = os.path.join(args.out_dir, "traced_sweep.trace.json")
+    prom_path = os.path.join(args.out_dir, "traced_sweep.prom")
+    obs.export_chrome_trace(trace_path)
+    obs.export_prometheus_file(prom_path)
+    print(f"\ntrace:   {trace_path}  (chrome://tracing / perfetto)")
+    print(f"metrics: {prom_path}")
+
+
+if __name__ == "__main__":
+    main()

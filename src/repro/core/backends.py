@@ -32,6 +32,8 @@ from typing import Callable, Optional
 
 import jax
 
+from repro import obs
+
 logger = logging.getLogger(__name__)
 
 ENV_BACKEND = "REPRO_SOLVER_BACKEND"
@@ -131,6 +133,15 @@ def resolve_interpret(interpret: "bool | None") -> bool:
         return False
     if not _interpret_notice_emitted:
         _interpret_notice_emitted = True
+        # Interpret mode is a process-level condition (the device does
+        # not change underneath a run), so the structured event fires
+        # once per process, mirroring the logger notice it supersedes
+        # for observability (backend_fallback_total{cause=...}).
+        obs.event(
+            "backend_fallback",
+            cause="interpret_mode",
+            jax_backend=jax.default_backend(),
+        )
         logger.warning(
             "Pallas solver backend: no TPU detected (jax backend=%s); "
             "running kernels in interpret mode. Results are identical "

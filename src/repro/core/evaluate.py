@@ -21,6 +21,7 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.digital import Params, mlp_forward
 from repro.core.imac import IMACConfig, build_plans, layer_latency, linear_forward
 from repro.core.mapping import MappedLayer, map_network
@@ -273,6 +274,47 @@ def evaluate_batch(
     cfgs = list(cfgs)
     if not cfgs:
         return []
+    with obs.trace("evaluate_batch", {"configs": len(cfgs)}):
+        return _evaluate_batch(
+            params,
+            x,
+            y,
+            cfgs,
+            n_samples=n_samples,
+            chunk=chunk,
+            variation_key=variation_key,
+            noise_key=noise_key,
+            noise_per_config=noise_per_config,
+            activation=activation,
+            mapped=mapped,
+            mapped_stacked=mapped_stacked,
+            solve_options=solve_options,
+        )
+
+
+def _evaluate_batch(
+    params,
+    x,
+    y,
+    cfgs,
+    *,
+    n_samples,
+    chunk,
+    variation_key,
+    noise_key,
+    noise_per_config,
+    activation,
+    mapped,
+    mapped_stacked,
+    solve_options,
+) -> "list[IMACResult]":
+    """`evaluate_batch` body (the wrapper holds the root span).
+
+    Stage spans follow the pipeline: map (mapWB / stacking) → stamp
+    (electrical-scalar assembly) → solve (chunked circuit solves, with
+    compile-vs-run split via obs.instrument_jit) → measure (host-side
+    reduction to IMACResults + solver-telemetry histograms).
+    """
     topology = [params[0][0].shape[0]] + [w.shape[1] for w, _ in params]
     key0 = structure_key(topology, cfgs[0])
     for c in cfgs[1:]:
@@ -299,39 +341,45 @@ def evaluate_batch(
     # mapWB per configuration (outside the trace, identical to the
     # single-config path), then stack: per layer (C, M, N) conductances
     # and (C,) sense scales; electrical scalars as (C,) vectors.
-    if mapped_stacked is not None:
-        if mapped is not None:
-            raise ValueError("pass either mapped or mapped_stacked, not both")
-        for m in mapped_stacked:
-            if m.g_pos.shape[0] != len(cfgs):
+    with obs.trace("map", {"layers": n_layers}):
+        if mapped_stacked is not None:
+            if mapped is not None:
                 raise ValueError(
-                    f"mapped_stacked leading axis {m.g_pos.shape[0]} != "
-                    f"{len(cfgs)} configurations"
+                    "pass either mapped or mapped_stacked, not both"
                 )
-        g_pos = tuple(m.g_pos for m in mapped_stacked)
-        g_neg = tuple(m.g_neg for m in mapped_stacked)
-        k = tuple(jnp.asarray(m.k, dtype) for m in mapped_stacked)
-    else:
-        mapped_all = mapped if mapped is not None else [
-            map_network(
-                params,
-                c.resolved_tech(),
-                v_unit=c.vdd,
-                quantize=c.quantize,
-                variation_key=variation_key,
-            )
-            for c in cfgs
-        ]
-        g_pos, g_neg, k = stack_mapped(mapped_all, dtype)
-    scal = dict(
-        r_seg=jnp.asarray([c.interconnect.r_segment for c in cfgs], dtype),
-        r_source=jnp.asarray([c.r_source for c in cfgs], dtype),
-        r_tia=jnp.asarray([c.r_tia for c in cfgs], dtype),
-        omega=jnp.asarray([c.sor_omega for c in cfgs], dtype),
-        read_noise=jnp.asarray(
-            [c.resolved_tech().read_noise_rel for c in cfgs], dtype
-        ),
-    )
+            for m in mapped_stacked:
+                if m.g_pos.shape[0] != len(cfgs):
+                    raise ValueError(
+                        f"mapped_stacked leading axis {m.g_pos.shape[0]} != "
+                        f"{len(cfgs)} configurations"
+                    )
+            g_pos = tuple(m.g_pos for m in mapped_stacked)
+            g_neg = tuple(m.g_neg for m in mapped_stacked)
+            k = tuple(jnp.asarray(m.k, dtype) for m in mapped_stacked)
+        else:
+            mapped_all = mapped if mapped is not None else [
+                map_network(
+                    params,
+                    c.resolved_tech(),
+                    v_unit=c.vdd,
+                    quantize=c.quantize,
+                    variation_key=variation_key,
+                )
+                for c in cfgs
+            ]
+            g_pos, g_neg, k = stack_mapped(mapped_all, dtype)
+    with obs.trace("stamp"):
+        scal = dict(
+            r_seg=jnp.asarray(
+                [c.interconnect.r_segment for c in cfgs], dtype
+            ),
+            r_source=jnp.asarray([c.r_source for c in cfgs], dtype),
+            r_tia=jnp.asarray([c.r_tia for c in cfgs], dtype),
+            omega=jnp.asarray([c.sor_omega for c in cfgs], dtype),
+            read_noise=jnp.asarray(
+                [c.resolved_tech().read_noise_rel for c in cfgs], dtype
+            ),
+        )
 
     # Waveform-accurate timing/energy: the whole stacked configuration
     # batch (sweep points or Monte-Carlo trials) integrates as ONE
@@ -353,11 +401,12 @@ def evaluate_batch(
             ),
             t_samp=jnp.asarray([c.t_sampling for c in cfgs], dtype),
         )
-        transient_res = network_transient_stacked(
-            g_pos, g_neg, k, tr_scal, plans, neuron, tspec,
-            jnp.asarray(x[: tspec.n_probe], dtype), v_unit, iters, tol,
-            dtype=dtype, solve_options=solve_options,
-        )
+        with obs.trace("transient", {"n_probe": tspec.n_probe}):
+            transient_res = network_transient_stacked(
+                g_pos, g_neg, k, tr_scal, plans, neuron, tspec,
+                jnp.asarray(x[: tspec.n_probe], dtype), v_unit, iters, tol,
+                dtype=dtype, solve_options=solve_options,
+            )
 
     def forward_all(gp, gn, kk, sc, xb, nkey):
         """Forward every stacked configuration over a chunk of samples.
@@ -373,7 +422,7 @@ def evaluate_batch(
             if nkey is not None
             else [None] * n_layers
         )
-        powers, residuals = [], []
+        powers, residuals, sweeps = [], [], []
         for layer, plan in enumerate(plans):
             cp = CircuitParams(
                 r_row=sc["r_seg"],
@@ -384,7 +433,7 @@ def evaluate_batch(
                 omega=sc["omega"],
                 tol=tol,
             )
-            a, power, residual, _ = linear_forward(
+            a, power, residual, _, swp = linear_forward(
                 gp[layer],
                 gn[layer],
                 kk[layer],
@@ -403,10 +452,16 @@ def evaluate_batch(
             )
             powers.append(jnp.mean(power, axis=-1))   # (C,)
             residuals.append(residual)                # (C,)
+            sweeps.append(swp)                        # scalar per layer
         pred = jnp.argmax(a, axis=-1)                 # (C, batch)
-        return pred, jnp.stack(powers, axis=-1), jnp.stack(residuals, axis=-1)
+        return (
+            pred,
+            jnp.stack(powers, axis=-1),
+            jnp.stack(residuals, axis=-1),
+            jnp.stack(sweeps),                        # (L,)
+        )
 
-    run_chunk = jax.jit(forward_all)
+    run_chunk = obs.instrument_jit(jax.jit(forward_all), "solve_chunk")
 
     n_chunks = (n + chunk - 1) // chunk
     keys = (
@@ -414,71 +469,89 @@ def evaluate_batch(
         if noise_key is not None
         else [None] * n_chunks
     )
-    preds, powers, residuals = [], [], []
-    for ci in range(n_chunks):
-        xb = x[ci * chunk : (ci + 1) * chunk]
-        pred, pwr, res = run_chunk(g_pos, g_neg, k, scal, xb, keys[ci])
-        preds.append(pred)                 # (C, B)
-        powers.append(pwr * xb.shape[0])   # weight by chunk size
-        residuals.append(res)
+    preds, powers, residuals, layer_sweeps = [], [], [], None
+    with obs.trace("solve", {"chunks": n_chunks, "n_samples": n}):
+        for ci in range(n_chunks):
+            xb = x[ci * chunk : (ci + 1) * chunk]
+            pred, pwr, res, swp = run_chunk(
+                g_pos, g_neg, k, scal, xb, keys[ci]
+            )
+            preds.append(pred)                 # (C, B)
+            powers.append(pwr * xb.shape[0])   # weight by chunk size
+            residuals.append(res)
+            layer_sweeps = swp                 # (L,), batch-wide per layer
     pred = jnp.concatenate(preds, axis=1)                      # (C, n)
     per_layer_power = jnp.sum(jnp.stack(powers), axis=0) / n   # (C, L)
     worst_res = jnp.max(jnp.stack(residuals), axis=0)          # (C, L)
 
-    dig_pred = jnp.argmax(mlp_forward(params, x, activation), axis=-1)
-    dig_acc = float(jnp.mean((dig_pred == y).astype(jnp.float32)))
-
-    results = []
-    latency_memo: dict = {}
-    for i, cfg in enumerate(cfgs):
-        errors = int(jnp.sum((pred[i] != y).astype(jnp.int32)))
-        # The analytic latency is input-independent (structural).
-        # Memoized by the fields it actually depends on — keying by
-        # id(cfg) would alias distinct configs when CPython reuses the
-        # address of a garbage-collected one.
-        memo_key = (cfg.interconnect, cfg.resolved_neuron(), cfg.t_sampling)
-        if memo_key not in latency_memo:
-            latency_memo[memo_key] = float(
-                sum(
-                    jnp.asarray(
-                        layer_latency(p, cfg.interconnect, cfg.resolved_neuron()),
-                        dtype,
-                    )
-                    for p in plans
-                )
-                + cfg.t_sampling
-            )
-        latency_an = latency_memo[memo_key]
-        plp = per_layer_power[i]
-        avg_power = float(jnp.sum(plp))
-        if transient_res is not None:
-            latency = float(transient_res.latency[i])
-            energy = float(transient_res.energy[i])
-            source = "transient"
-            settled = bool(transient_res.settled[i])
-        else:
-            latency = latency_an
-            energy = avg_power * latency_an
-            source = "analytic"
-            settled = True
-        results.append(
-            IMACResult(
-                accuracy=1.0 - errors / n,
-                error_rate=errors / n,
-                avg_power=avg_power,
-                latency=latency,
-                digital_accuracy=dig_acc,
-                per_layer_power=tuple(float(p) for p in plp),
-                worst_residual=float(jnp.max(worst_res[i])),
-                n_samples=n,
-                hp=tuple(p.hp for p in plans),
-                vp=tuple(p.vp for p in plans),
-                energy=energy,
-                latency_analytic=latency_an,
-                latency_source=source,
-                settled=settled,
-            )
+    if obs.enabled():
+        # Solver convergence telemetry, recorded on the host from the
+        # aux outputs that already leave the jit (no callbacks inside).
+        h_sw = obs.histogram("solver_sweeps", buckets=obs.SWEEPS_BUCKETS)
+        h_res = obs.histogram(
+            "solver_residual", buckets=obs.RESIDUAL_BUCKETS
         )
+        for layer in range(n_layers):
+            h_sw.observe(int(layer_sweeps[layer]))
+        for value in jnp.ravel(worst_res):
+            h_res.observe(float(value))
+        obs.counter("solver_chunks_total").inc(n_chunks)
+
+    with obs.trace("measure"):
+        dig_pred = jnp.argmax(mlp_forward(params, x, activation), axis=-1)
+        dig_acc = float(jnp.mean((dig_pred == y).astype(jnp.float32)))
+
+        results = []
+        latency_memo: dict = {}
+        for i, cfg in enumerate(cfgs):
+            errors = int(jnp.sum((pred[i] != y).astype(jnp.int32)))
+            # The analytic latency is input-independent (structural).
+            # Memoized by the fields it actually depends on — keying by
+            # id(cfg) would alias distinct configs when CPython reuses the
+            # address of a garbage-collected one.
+            memo_key = (cfg.interconnect, cfg.resolved_neuron(), cfg.t_sampling)
+            if memo_key not in latency_memo:
+                latency_memo[memo_key] = float(
+                    sum(
+                        jnp.asarray(
+                            layer_latency(p, cfg.interconnect, cfg.resolved_neuron()),
+                            dtype,
+                        )
+                        for p in plans
+                    )
+                    + cfg.t_sampling
+                )
+            latency_an = latency_memo[memo_key]
+            plp = per_layer_power[i]
+            avg_power = float(jnp.sum(plp))
+            if transient_res is not None:
+                latency = float(transient_res.latency[i])
+                energy = float(transient_res.energy[i])
+                source = "transient"
+                settled = bool(transient_res.settled[i])
+            else:
+                latency = latency_an
+                energy = avg_power * latency_an
+                source = "analytic"
+                settled = True
+            results.append(
+                IMACResult(
+                    accuracy=1.0 - errors / n,
+                    error_rate=errors / n,
+                    avg_power=avg_power,
+                    latency=latency,
+                    digital_accuracy=dig_acc,
+                    per_layer_power=tuple(float(p) for p in plp),
+                    worst_residual=float(jnp.max(worst_res[i])),
+                    n_samples=n,
+                    hp=tuple(p.hp for p in plans),
+                    vp=tuple(p.vp for p in plans),
+                    energy=energy,
+                    latency_analytic=latency_an,
+                    latency_source=source,
+                    settled=settled,
+                )
+            )
     return results
 
 
@@ -564,14 +637,15 @@ def evaluate_netlist(
     """
     from repro.spice.lower import lower_network
 
-    net = lower_network(netlist, main=main)
-    params = [
-        (jnp.asarray(w), jnp.asarray(b)) for w, b in net.to_params()
-    ]
-    cfg = net.to_config(**(cfg_overrides or {}))
-    result = evaluate_batch(
-        params, x, y, [cfg], mapped=[net.to_mapped()], **kw
-    )[0]
+    with obs.trace("evaluate_netlist"):
+        net = lower_network(netlist, main=main)
+        params = [
+            (jnp.asarray(w), jnp.asarray(b)) for w, b in net.to_params()
+        ]
+        cfg = net.to_config(**(cfg_overrides or {}))
+        result = evaluate_batch(
+            params, x, y, [cfg], mapped=[net.to_mapped()], **kw
+        )[0]
     return result, net
 
 

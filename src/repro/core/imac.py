@@ -109,6 +109,7 @@ class LayerStats(NamedTuple):
     latency: jax.Array     # scalar, settling latency estimate (s)
     residual: jax.Array    # worst GS residual across tiles
     z: jax.Array           # (batch, fan_out) recovered pre-activations
+    sweeps: jax.Array = 0  # GS sweeps the layer's solve actually ran
 
 
 class TransientStats(NamedTuple):
@@ -182,13 +183,15 @@ def linear_forward(
     per stacked entry — what a Monte-Carlo trial axis wants.
 
     Returns:
-      (activations, power, residual, z) — power is (..., batch), residual
-      (...,), z the recovered pre-activations.
+      (activations, power, residual, z, sweeps) — power is (..., batch),
+      residual (...,), z the recovered pre-activations, sweeps the GS
+      trip count of the layer's circuit solve (0 without parasitics).
     """
     # Bias input: driven at v_unit (logical activation 1).
     ones = jnp.ones(a.shape[:-1] + (1,), dtype)
     v = jnp.concatenate([a.astype(dtype), ones], axis=-1) * v_unit
 
+    sweeps = jnp.zeros((), jnp.int32)
     if not parasitics:
         g_diff = (g_pos - g_neg).astype(dtype)
         i_diff = jnp.einsum("...mn,...bm->...bn", g_diff, v)
@@ -211,6 +214,7 @@ def linear_forward(
         i_diff = i_pos - i_neg
         p_dev = crossbar_power(g_b, v_all, sol, cp).sum(axis=-1)
         residual = jnp.max(sol.residual, axis=(-1, -2))
+        sweeps = jnp.asarray(sol.sweeps, jnp.int32)
 
     if noise_key is not None:
         # Default: one draw shared by every stacked configuration —
@@ -232,7 +236,7 @@ def linear_forward(
     n_neurons = plan.total_cols
     p_iface = n_amps * neuron.p_amp + n_neurons * neuron.p_neuron
     power = p_dev + p_iface
-    return act, power, residual, z
+    return act, power, residual, z, sweeps
 
 
 def layer_latency(plan: PartitionPlan, interconnect: Interconnect, neuron) -> float:
@@ -275,7 +279,7 @@ def imac_linear(
     dtype = cfg.dtype
     if not (noise_key is not None and tech.read_noise_rel > 0.0):
         noise_key = None
-    act, power, residual, z = linear_forward(
+    act, power, residual, z, sweeps = linear_forward(
         mapped.g_pos,
         mapped.g_neg,
         mapped.k,
@@ -294,7 +298,9 @@ def imac_linear(
     latency = jnp.asarray(layer_latency(plan, cfg.interconnect, neuron), dtype)
     return IMACLayerOutput(
         activations=act,
-        stats=LayerStats(power=power, latency=latency, residual=residual, z=z),
+        stats=LayerStats(
+            power=power, latency=latency, residual=residual, z=z, sweeps=sweeps
+        ),
     )
 
 

@@ -96,6 +96,12 @@ class CrossbarSolution(NamedTuple):
     vr: jax.Array      # (..., M, N) row-wire node voltages
     vc: jax.Array      # (..., M, N) column-wire node voltages
     residual: jax.Array  # scalar-ish (...) final GS update magnitude
+    # Gauss–Seidel sweeps actually run: the while_loop trip count under
+    # tol-based early exit, else the static gs_iters budget. A scalar
+    # (the early-exit condition is a batch max, so the whole batch
+    # sweeps together) — solver telemetry rides this aux output out of
+    # jit instead of host callbacks (see repro.obs).
+    sweeps: jax.Array = 0
 
 
 @jax.tree_util.register_dataclass
@@ -475,7 +481,7 @@ def _sweep_solve(
             res = jnp.max(jnp.abs(vc_new - vc), axis=(-1, -2))
             return vc_new, res, i + 1
 
-        vc, residual, _ = jax.lax.while_loop(
+        vc, residual, sweeps = jax.lax.while_loop(
             w_cond, w_body, (vc0, res0, jnp.zeros((), jnp.int32))
         )
     else:
@@ -487,9 +493,12 @@ def _sweep_solve(
             return vc_new, res
 
         vc, residual = jax.lax.fori_loop(0, cp.gs_iters, body, (vc0, res0))
+        sweeps = jnp.asarray(cp.gs_iters, jnp.int32)
     vr, vc = sweep(vc)  # final row solve consistent with converged vc
     i_out = _align(cp.g_tia, vc.ndim - 1, g.dtype) * vc[..., m - 1, :]
-    return CrossbarSolution(i_out=i_out, vr=vr, vc=vc, residual=residual)
+    return CrossbarSolution(
+        i_out=i_out, vr=vr, vc=vc, residual=residual, sweeps=sweeps
+    )
 
 
 def suggest_iters(m: int, n: int) -> int:
@@ -616,7 +625,11 @@ def solve_dense_mna(
     vc = x[m * n :].reshape(m, n)
     i_out = cp.g_tia * vc[m - 1, :]
     return CrossbarSolution(
-        i_out=i_out, vr=vr, vc=vc, residual=jnp.zeros(())
+        i_out=i_out,
+        vr=vr,
+        vc=vc,
+        residual=jnp.zeros(()),
+        sweeps=jnp.zeros((), jnp.int32),
     )
 
 

@@ -19,6 +19,7 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.evaluate import IMACResult
 from repro.core.imac import IMACConfig
 from repro.variability.report import ReliabilityReport
@@ -109,13 +110,28 @@ def result_key(
 
 
 class ResultCache:
-    """Directory-backed result store: one JSON file per evaluation."""
+    """Directory-backed result store: one JSON file per evaluation.
 
-    def __init__(self, path: str):
+    Args:
+      path: cache directory (created if missing).
+      max_entries: optional size cap; when a `put` pushes the directory
+        past it, the oldest entries (by file mtime) are evicted and
+        counted as ``cache_evictions_total``.
+    """
+
+    def __init__(self, path: str, max_entries: "Optional[int]" = None):
         self.path = path
         os.makedirs(path, exist_ok=True)
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.max_entries = max_entries
+        if obs.enabled():
+            # Register the series at 0 so exports show them even for an
+            # all-miss (or never-hit) run.
+            obs.counter("cache_hits_total")
+            obs.counter("cache_misses_total")
+            obs.counter("cache_evictions_total")
 
     def _file(self, key: str) -> str:
         return os.path.join(self.path, f"{key}.json")
@@ -124,11 +140,13 @@ class ResultCache:
         f = self._file(key)
         if not os.path.exists(f):
             self.misses += 1
+            obs.counter("cache_misses_total").inc()
             return None
         with open(f) as fh:
             payload = json.load(fh)
         r = payload["result"]
         self.hits += 1
+        obs.counter("cache_hits_total").inc()
         if payload.get("kind", "imac") == "reliability":
             # JSON round-trip turns tuples into lists; restore them.
             return ReliabilityReport(**{
@@ -166,6 +184,43 @@ class ResultCache:
         with open(tmp, "w") as fh:
             json.dump(payload, fh)
         os.replace(tmp, self._file(key))
+        if self.max_entries is not None:
+            self.prune()
+
+    def prune(self) -> int:
+        """Evict oldest entries until the cache fits `max_entries`.
+
+        Returns the number of files removed (0 when uncapped or under
+        the cap). Age is file mtime — `put` rewrites refresh it, so the
+        policy is FIFO-with-refresh rather than strict insertion order.
+        """
+        if self.max_entries is None:
+            return 0
+        files = [
+            os.path.join(self.path, f)
+            for f in os.listdir(self.path)
+            if f.endswith(".json")
+        ]
+        excess = len(files) - self.max_entries
+        if excess <= 0:
+            return 0
+        files.sort(key=os.path.getmtime)
+        removed = 0
+        for f in files[:excess]:
+            try:
+                os.remove(f)
+                removed += 1
+            except OSError:
+                continue
+        if removed:
+            self.evictions += removed
+            obs.counter("cache_evictions_total").inc(removed)
+            if obs.enabled():
+                obs.add_instant(
+                    "cache_evict",
+                    {"removed": removed, "max_entries": self.max_entries},
+                )
+        return removed
 
     def __len__(self) -> int:
         return sum(

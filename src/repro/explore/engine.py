@@ -35,6 +35,7 @@ from typing import Optional, Sequence, Union
 
 import jax
 
+from repro import obs
 from repro.core.digital import Params
 from repro.core.evaluate import (
     IMACResult,
@@ -141,163 +142,170 @@ def run_sweep(
       One SweepResult per point, in input order.
     """
     items = _as_points(points)
-    if timing:
-        tspec = timing if isinstance(timing, TransientSpec) else TransientSpec()
-        items = [
-            (
-                name,
-                cfg
-                if cfg.transient is not None
-                else dataclasses.replace(cfg, transient=tspec),
-            )
-            for name, cfg in items
-        ]
-    if isinstance(cache, str):
-        cache = ResultCache(cache)
-    topology = [params[0][0].shape[0]] + [w.shape[1] for w, _ in params]
+    with obs.trace("run_sweep", {"points": len(items)}):
+        if timing:
+            tspec = timing if isinstance(timing, TransientSpec) else TransientSpec()
+            items = [
+                (
+                    name,
+                    cfg
+                    if cfg.transient is not None
+                    else dataclasses.replace(cfg, transient=tspec),
+                )
+                for name, cfg in items
+            ]
+        if isinstance(cache, str):
+            cache = ResultCache(cache)
+        topology = [params[0][0].shape[0]] + [w.shape[1] for w, _ in params]
 
-    results: "list[Optional[SweepResult]]" = [None] * len(items)
+        results: "list[Optional[SweepResult]]" = [None] * len(items)
 
-    # 1. Memo lookup.
-    keys: "list[Optional[str]]" = [None] * len(items)
-    pending: "list[int]" = []
-    if cache is not None:
-        params_fp = params_fingerprint(params)
-        data_fp = data_fingerprint(
-            x[: n_samples or x.shape[0]], y[: n_samples or y.shape[0]]
-        )
-        for i, (name, cfg) in enumerate(items):
-            # Reliability points draw everything from their spec's seed,
-            # so their results — and cache keys — are independent of the
-            # sweep-level Monte-Carlo keys.
-            is_mc = cfg.variability is not None
-            keys[i] = result_key(
-                cfg,
-                params_fp,
-                data_fp,
-                n_samples=n_samples,
-                chunk=chunk,
-                variation_key=None if is_mc else variation_key,
-                noise_key=None if is_mc else noise_key,
-                activation=activation,
-            )
-            hit = cache.get(keys[i])
-            if hit is not None:
-                results[i] = SweepResult(name, cfg, hit, cached=True)
-            else:
-                pending.append(i)
-    else:
-        pending = list(range(len(items)))
-
-    # 2. Group the misses by traced structure.
-    groups: "dict[tuple, list[int]]" = {}
-    for i in pending:
-        groups.setdefault(structure_key(topology, items[i][1]), []).append(i)
-
-    # mapWB depends only on (tech, vdd, quantize) for fixed params, so a
-    # sweep over P partitionings x T technologies needs T mappings, not
-    # P*T — memoize across groups. Monte-Carlo points share the same memo
-    # for their deterministic base mapping (variation is drawn per trial,
-    # not via the sweep-wide variation_key).
-    mapping_memo: dict = {}
-
-    def _mapped(cfg: IMACConfig, tech=None, vkey=variation_key):
-        tech = tech if tech is not None else cfg.resolved_tech()
-        memo_key = (
-            tech.name, tech.r_low, tech.r_high, tech.levels, tech.sigma_rel,
-            cfg.vdd, cfg.quantize, vkey is None,
-        )
-        if memo_key not in mapping_memo:
-            mapping_memo[memo_key] = map_network(
-                params,
-                tech,
-                v_unit=cfg.vdd,
-                quantize=cfg.quantize,
-                variation_key=vkey,
-            )
-        return mapping_memo[memo_key]
-
-    # 3. One batched solve per group. Deterministic points contribute one
-    # stacked entry each; Monte-Carlo points contribute their T trial
-    # entries — all sharing the group's single compiled solve. Exception:
-    # Monte-Carlo points whose resolved technology has read noise run
-    # solo through run_variability so their per-trial noise draws depend
-    # only on the spec's seed (not on the point's position in the stack)
-    # — identical results to a direct run_variability call, and safe to
-    # memoize across differently-composed sweeps.
-    for gi, (skey, idxs) in enumerate(groups.items()):
-        t0 = time.perf_counter()
-        entry_cfgs, stacks, spans, solo = [], [], [], []
-        for i in idxs:
-            cfg = items[i][1]
-            vspec = cfg.variability
-            if vspec is None:
-                entry_cfgs.append(cfg)
-                stacks.append(lift_mapped(_mapped(cfg)))
-                spans.append((i, 1, None))
-                continue
-            base_tech = vspec.resolve_tech(cfg.resolved_tech())
-            if base_tech.read_noise_rel > 0.0:
-                solo.append(i)
-                continue
-            # Degenerate spec: all trials identical -> one stacked entry,
-            # replicated back to T at summarize time.
-            collapse = (
-                vspec.trials > 1
-                and vspec.is_deterministic_for(cfg.resolved_tech())
-            )
-            tcfgs, tstacked = expand_trials(
-                params, cfg, vspec,
-                keys=trial_keys(vspec)[:1] if collapse else None,
-                base_mapped=_mapped(cfg, tech=base_tech, vkey=None),
-            )
-            entry_cfgs.extend(tcfgs)
-            stacks.append(tstacked)
-            spans.append((i, len(tcfgs), vspec))
-        batch = evaluate_batch(
-            params,
-            x,
-            y,
-            entry_cfgs,
-            n_samples=n_samples,
-            chunk=chunk,
-            variation_key=variation_key,
-            noise_key=noise_key,
-            activation=activation,
-            mapped_stacked=concat_mapped(stacks) if stacks else None,
-        ) if entry_cfgs else []
-        for i in solo:
-            name, cfg = items[i]
-            rep = run_variability(
-                params, x, y, cfg, cfg.variability,
-                n_samples=n_samples, chunk=chunk, activation=activation,
-            )
-            results[i] = SweepResult(name, cfg, rep, cached=False)
+        # 1. Memo lookup.
+        keys: "list[Optional[str]]" = [None] * len(items)
+        pending: "list[int]" = []
+        with obs.trace("memo_lookup", {"points": len(items)}):
             if cache is not None:
-                cache.put(keys[i], rep, name=name)
-        if verbose:
-            dt = time.perf_counter() - t0
-            print(
-                f"[explore] group {gi + 1}/{len(groups)}: "
-                f"{len(idxs)} configs ({len(entry_cfgs)} stacked entries, "
-                f"{len(solo)} solo) in {dt:.2f}s (plans {skey[1]})"
-            )
-        pos = 0
-        for i, count, vspec in spans:
-            name, cfg = items[i]
-            if vspec is None:
-                res = batch[pos]
+                params_fp = params_fingerprint(params)
+                data_fp = data_fingerprint(
+                    x[: n_samples or x.shape[0]], y[: n_samples or y.shape[0]]
+                )
+                for i, (name, cfg) in enumerate(items):
+                    # Reliability points draw everything from their spec's seed,
+                    # so their results — and cache keys — are independent of the
+                    # sweep-level Monte-Carlo keys.
+                    is_mc = cfg.variability is not None
+                    keys[i] = result_key(
+                        cfg,
+                        params_fp,
+                        data_fp,
+                        n_samples=n_samples,
+                        chunk=chunk,
+                        variation_key=None if is_mc else variation_key,
+                        noise_key=None if is_mc else noise_key,
+                        activation=activation,
+                    )
+                    hit = cache.get(keys[i])
+                    if hit is not None:
+                        results[i] = SweepResult(name, cfg, hit, cached=True)
+                    else:
+                        pending.append(i)
             else:
-                trials = batch[pos : pos + count]
-                if count == 1 and vspec.trials > 1:  # collapsed degenerate
-                    trials = trials * vspec.trials
-                res = summarize(trials, acc_threshold=vspec.acc_threshold)
-            pos += count
-            results[i] = SweepResult(name, cfg, res, cached=False)
-            if cache is not None:
-                cache.put(keys[i], res, name=name)
+                pending = list(range(len(items)))
 
-    return [r for r in results if r is not None]
+        # 2. Group the misses by traced structure.
+        groups: "dict[tuple, list[int]]" = {}
+        for i in pending:
+            groups.setdefault(structure_key(topology, items[i][1]), []).append(i)
+
+        # mapWB depends only on (tech, vdd, quantize) for fixed params, so a
+        # sweep over P partitionings x T technologies needs T mappings, not
+        # P*T — memoize across groups. Monte-Carlo points share the same memo
+        # for their deterministic base mapping (variation is drawn per trial,
+        # not via the sweep-wide variation_key).
+        mapping_memo: dict = {}
+
+        def _mapped(cfg: IMACConfig, tech=None, vkey=variation_key):
+            tech = tech if tech is not None else cfg.resolved_tech()
+            memo_key = (
+                tech.name, tech.r_low, tech.r_high, tech.levels, tech.sigma_rel,
+                cfg.vdd, cfg.quantize, vkey is None,
+            )
+            if memo_key not in mapping_memo:
+                mapping_memo[memo_key] = map_network(
+                    params,
+                    tech,
+                    v_unit=cfg.vdd,
+                    quantize=cfg.quantize,
+                    variation_key=vkey,
+                )
+            return mapping_memo[memo_key]
+
+        # 3. One batched solve per group. Deterministic points contribute one
+        # stacked entry each; Monte-Carlo points contribute their T trial
+        # entries — all sharing the group's single compiled solve. Exception:
+        # Monte-Carlo points whose resolved technology has read noise run
+        # solo through run_variability so their per-trial noise draws depend
+        # only on the spec's seed (not on the point's position in the stack)
+        # — identical results to a direct run_variability call, and safe to
+        # memoize across differently-composed sweeps.
+        for gi, (skey, idxs) in enumerate(groups.items()):
+            with obs.trace(
+                f"group[{gi}]", {"configs": len(idxs), "group": gi}
+            ) as g_span:
+                t0 = time.perf_counter()
+                entry_cfgs, stacks, spans, solo = [], [], [], []
+                for i in idxs:
+                    cfg = items[i][1]
+                    vspec = cfg.variability
+                    if vspec is None:
+                        entry_cfgs.append(cfg)
+                        stacks.append(lift_mapped(_mapped(cfg)))
+                        spans.append((i, 1, None))
+                        continue
+                    base_tech = vspec.resolve_tech(cfg.resolved_tech())
+                    if base_tech.read_noise_rel > 0.0:
+                        solo.append(i)
+                        continue
+                    # Degenerate spec: all trials identical -> one stacked entry,
+                    # replicated back to T at summarize time.
+                    collapse = (
+                        vspec.trials > 1
+                        and vspec.is_deterministic_for(cfg.resolved_tech())
+                    )
+                    tcfgs, tstacked = expand_trials(
+                        params, cfg, vspec,
+                        keys=trial_keys(vspec)[:1] if collapse else None,
+                        base_mapped=_mapped(cfg, tech=base_tech, vkey=None),
+                    )
+                    entry_cfgs.extend(tcfgs)
+                    stacks.append(tstacked)
+                    spans.append((i, len(tcfgs), vspec))
+                g_span.set("stacked", len(entry_cfgs))
+                g_span.set("solo", len(solo))
+                batch = evaluate_batch(
+                    params,
+                    x,
+                    y,
+                    entry_cfgs,
+                    n_samples=n_samples,
+                    chunk=chunk,
+                    variation_key=variation_key,
+                    noise_key=noise_key,
+                    activation=activation,
+                    mapped_stacked=concat_mapped(stacks) if stacks else None,
+                ) if entry_cfgs else []
+                for i in solo:
+                    name, cfg = items[i]
+                    rep = run_variability(
+                        params, x, y, cfg, cfg.variability,
+                        n_samples=n_samples, chunk=chunk, activation=activation,
+                    )
+                    results[i] = SweepResult(name, cfg, rep, cached=False)
+                    if cache is not None:
+                        cache.put(keys[i], rep, name=name)
+                if verbose:
+                    dt = time.perf_counter() - t0
+                    print(
+                        f"[explore] group {gi + 1}/{len(groups)}: "
+                        f"{len(idxs)} configs ({len(entry_cfgs)} stacked entries, "
+                        f"{len(solo)} solo) in {dt:.2f}s (plans {skey[1]})"
+                    )
+                pos = 0
+                for i, count, vspec in spans:
+                    name, cfg = items[i]
+                    if vspec is None:
+                        res = batch[pos]
+                    else:
+                        trials = batch[pos : pos + count]
+                        if count == 1 and vspec.trials > 1:  # collapsed degenerate
+                            trials = trials * vspec.trials
+                        res = summarize(trials, acc_threshold=vspec.acc_threshold)
+                    pos += count
+                    results[i] = SweepResult(name, cfg, res, cached=False)
+                    if cache is not None:
+                        cache.put(keys[i], res, name=name)
+
+        return [r for r in results if r is not None]
 
 
 def explore(

@@ -21,6 +21,7 @@ import logging
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.gs_fused.kernel import gs_fused_nb
 
 logger = logging.getLogger(__name__)
@@ -128,6 +129,17 @@ def fused_solve(g, v_in, cp, stamps=None, *, interpret: bool = False):
 
     lb = fused_lane_block(m, n, dtype)
     if lb < 1:
+        # Structured telemetry: one event per fallback occurrence, with
+        # the cause and the backend actually taking over (counted as
+        # backend_fallback_total{cause="vmem_budget",...}). The legacy
+        # one-shot logger notice stays for uninstrumented runs.
+        obs.event(
+            "backend_fallback",
+            cause="vmem_budget",
+            from_backend="fused",
+            to_backend="pallas",
+            tile=f"{m}x{n}",
+        )
         global _fallback_notice_emitted
         if not _fallback_notice_emitted:
             _fallback_notice_emitted = True
@@ -250,4 +262,10 @@ def fused_solve(g, v_in, cp, stamps=None, *, interpret: bool = False):
     vc = vc[:b_total].reshape(batch + (m, n))
     residual = res[:b_total, 0, 0].reshape(batch)
     i_out = _align(cp.g_tia, vc.ndim - 1, dtype) * vc[..., m - 1, :]
-    return CrossbarSolution(i_out=i_out, vr=vr, vc=vc, residual=residual)
+    return CrossbarSolution(
+        i_out=i_out,
+        vr=vr,
+        vc=vc,
+        residual=residual,
+        sweeps=jnp.asarray(int(cp.gs_iters), jnp.int32),
+    )

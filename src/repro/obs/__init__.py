@@ -1,0 +1,90 @@
+"""repro.obs — dependency-free tracing, metrics and telemetry events.
+
+The observability layer shared by all four engines (explore /
+variability / transient / spice-lowered evaluation) and the solver
+backend registry:
+
+  * **span tracer** — ``with obs.trace("solve_dc"): ...`` /
+    ``@obs.traced()``; thread-safe, nestable; exports Chrome
+    ``trace_event`` JSON (`export_chrome_trace`) and a plain-text tree
+    (`span_tree`). `instrument_jit` splits jitted calls into
+    ``[compile]`` vs ``[run]`` spans.
+  * **metrics registry** — `counter` / `gauge` / `histogram` (fixed
+    exponential buckets) with Prometheus text (`export_prometheus`) and
+    JSON (`snapshot` / `export_json`) exporters.
+  * **structured events** — `event("backend_fallback", cause=...)`
+    counts occurrences, keeps an assertable event log (`events`), and
+    marks the span timeline.
+
+Everything is gated on one process-wide flag (`enable` / `disable` /
+``REPRO_OBS=1``); when disabled, every entry point is a single flag
+check returning shared no-op handles — zero allocations on the hot
+path. See README § Observability.
+"""
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    RESIDUAL_BUCKETS,
+    SECONDS_BUCKETS,
+    SWEEPS_BUCKETS,
+    counter,
+    event,
+    events,
+    export_json,
+    export_prometheus,
+    export_prometheus_file,
+    exponential_buckets,
+    gauge,
+    histogram,
+    snapshot,
+)
+from repro.obs.metrics import reset as _reset_metrics
+from repro.obs.state import disable, enable, enabled
+from repro.obs.trace import (
+    Span,
+    add_instant,
+    chrome_trace,
+    export_chrome_trace,
+    instrument_jit,
+    span_tree,
+    spans,
+    trace,
+    traced,
+)
+from repro.obs.trace import reset as _reset_traces
+
+
+def reset() -> None:
+    """Drop all recorded spans, events and metrics (keeps the flag)."""
+    _reset_traces()
+    _reset_metrics()
+
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "RESIDUAL_BUCKETS",
+    "SECONDS_BUCKETS",
+    "SWEEPS_BUCKETS",
+    "Span",
+    "add_instant",
+    "chrome_trace",
+    "counter",
+    "disable",
+    "enable",
+    "enabled",
+    "event",
+    "events",
+    "export_chrome_trace",
+    "export_json",
+    "export_prometheus",
+    "export_prometheus_file",
+    "exponential_buckets",
+    "gauge",
+    "histogram",
+    "instrument_jit",
+    "reset",
+    "snapshot",
+    "span_tree",
+    "spans",
+    "trace",
+    "traced",
+]

@@ -1,0 +1,340 @@
+"""Metrics registry: counters, gauges, histograms, structured events.
+
+One process-wide registry keyed by (metric name, label set). Handles are
+obtained with `counter` / `gauge` / `histogram` and are cheap to fetch
+repeatedly (a dict lookup under a lock); when observability is disabled
+every accessor returns a shared no-op handle so instrumented code pays a
+single flag check and allocates nothing.
+
+Histograms use *fixed* bucket edges chosen at first registration —
+`exponential_buckets(start, factor, count)` builds the geometric ladders
+solver telemetry wants (sweep counts, residual magnitudes). Exporters:
+
+  * `export_prometheus()` — Prometheus text exposition format
+    (``name_bucket{le="..."}`` / ``_sum`` / ``_count`` for histograms);
+  * `snapshot()` / `export_json()` — a JSON-able dict, embedded by
+    ``benchmarks/run.py`` into each ``BENCH_<name>.json``.
+
+`event(name, **fields)` records a structured occurrence: it increments
+the ``<name>_total`` counter labeled by the event's scalar fields, keeps
+the full record on an event log (`events()` — what regression tests
+assert against), and drops an instant mark on the span timeline so
+Chrome traces show *when* a backend fallback or cache eviction happened.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import math
+import threading
+import time
+from typing import Optional, Sequence
+
+from repro.obs import state, trace as _trace
+
+_lock = threading.RLock()
+_metrics: "dict[tuple, object]" = {}
+_types: "dict[str, str]" = {}
+_events: "list[dict]" = []
+
+
+def exponential_buckets(
+    start: float, factor: float, count: int
+) -> "tuple[float, ...]":
+    """`count` geometric bucket edges: start, start*factor, ... ."""
+    if start <= 0.0 or factor <= 1.0 or count < 1:
+        raise ValueError("need start > 0, factor > 1, count >= 1")
+    return tuple(start * factor**i for i in range(count))
+
+
+#: Default edges: 1..2^15 — covers iteration-count style histograms.
+DEFAULT_BUCKETS = exponential_buckets(1.0, 2.0, 16)
+
+#: Gauss–Seidel sweeps-to-converge (suggest_iters tops out in the
+#: hundreds for paper-scale tiles).
+SWEEPS_BUCKETS = exponential_buckets(1.0, 2.0, 12)
+
+#: Final-residual magnitudes (volts): 1e-10 .. 10, decade per bucket.
+RESIDUAL_BUCKETS = exponential_buckets(1e-10, 10.0, 12)
+
+#: Wall-clock seconds: 100 µs .. ~1.7 min, quadrupling.
+SECONDS_BUCKETS = exponential_buckets(1e-4, 4.0, 11)
+
+
+def _labels_key(labels: "Optional[dict]") -> tuple:
+    if not labels:
+        return ()
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class Counter:
+    """Monotonic counter."""
+
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: tuple):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError("counters only go up; use a gauge")
+        with _lock:
+            self.value += amount
+
+
+class Gauge:
+    """Point-in-time value."""
+
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: tuple):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        with _lock:
+            self.value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        with _lock:
+            self.value += amount
+
+
+class Histogram:
+    """Histogram over fixed (exponential) bucket edges.
+
+    `counts[i]` counts observations with ``value <= edges[i]`` exclusive
+    of earlier buckets; the final slot is the +Inf overflow. Prometheus
+    export emits the conventional cumulative ``_bucket`` series.
+    """
+
+    __slots__ = ("name", "labels", "edges", "counts", "sum", "count")
+
+    def __init__(self, name: str, labels: tuple, edges: "Sequence[float]"):
+        edges = tuple(float(e) for e in edges)
+        if list(edges) != sorted(edges) or len(set(edges)) != len(edges):
+            raise ValueError("bucket edges must be strictly increasing")
+        self.name = name
+        self.labels = labels
+        self.edges = edges
+        self.counts = [0] * (len(edges) + 1)
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        if math.isnan(value):
+            return
+        idx = bisect.bisect_left(self.edges, value)
+        with _lock:
+            self.counts[idx] += 1
+            self.sum += value
+            self.count += 1
+
+    def cumulative(self) -> "list[tuple[float, int]]":
+        """(le_edge, cumulative_count) pairs, ending with (+inf, count)."""
+        out, acc = [], 0
+        with _lock:
+            for edge, c in zip(self.edges, self.counts):
+                acc += c
+                out.append((edge, acc))
+            out.append((math.inf, self.count))
+        return out
+
+
+class _Noop:
+    """Disabled-mode handle for every metric kind."""
+
+    __slots__ = ()
+
+    def inc(self, amount: float = 1.0):
+        pass
+
+    def set(self, value: float):
+        pass
+
+    def observe(self, value: float):
+        pass
+
+
+_NOOP = _Noop()
+
+
+def _get(kind: str, cls, name: str, labels: "Optional[dict]", *args):
+    if not state._enabled:
+        return _NOOP
+    key = (name, _labels_key(labels))
+    with _lock:
+        prev = _types.get(name)
+        if prev is not None and prev != kind:
+            raise ValueError(
+                f"metric {name!r} already registered as {prev}, "
+                f"cannot re-register as {kind}"
+            )
+        m = _metrics.get(key)
+        if m is None:
+            _types[name] = kind
+            m = _metrics[key] = cls(name, key[1], *args)
+        return m
+
+
+def counter(name: str, labels: "Optional[dict]" = None) -> Counter:
+    """Get-or-create the counter (name, labels). Registers at 0."""
+    return _get("counter", Counter, name, labels)
+
+
+def gauge(name: str, labels: "Optional[dict]" = None) -> Gauge:
+    """Get-or-create the gauge (name, labels)."""
+    return _get("gauge", Gauge, name, labels)
+
+
+def histogram(
+    name: str,
+    labels: "Optional[dict]" = None,
+    buckets: "Optional[Sequence[float]]" = None,
+) -> Histogram:
+    """Get-or-create the histogram; `buckets` binds at first creation."""
+    return _get(
+        "histogram", Histogram, name, labels, buckets or DEFAULT_BUCKETS
+    )
+
+
+def event(name: str, **fields) -> None:
+    """Record a structured event (no-op when observability is off).
+
+    Increments ``<name>_total`` labeled by the event's scalar fields,
+    appends the full record to the event log, and marks the span
+    timeline. Scalar fields (str/int/bool) become counter labels; other
+    values ride only on the event record.
+    """
+    if not state._enabled:
+        return
+    labels = {
+        k: v for k, v in fields.items() if isinstance(v, (str, int, bool))
+    }
+    counter(f"{name}_total", labels).inc()
+    with _lock:
+        _events.append(
+            {"name": name, "ts": time.perf_counter(), "fields": dict(fields)}
+        )
+    _trace.add_instant(name, labels)
+
+
+def events(name: "Optional[str]" = None) -> "list[dict]":
+    """Snapshot of recorded events, optionally filtered by name."""
+    with _lock:
+        recs = list(_events)
+    if name is None:
+        return recs
+    return [r for r in recs if r["name"] == name]
+
+
+def reset() -> None:
+    """Drop every registered metric and recorded event."""
+    with _lock:
+        _metrics.clear()
+        _types.clear()
+        _events.clear()
+
+
+# ---------------------------------------------------------------------------
+# Exporters.
+# ---------------------------------------------------------------------------
+
+
+def _fmt_labels(labels: tuple, extra: "Optional[tuple]" = None) -> str:
+    items = list(labels) + (list(extra) if extra else [])
+    if not items:
+        return ""
+    body = ",".join(
+        '{}="{}"'.format(
+            k, str(v).replace("\\", r"\\").replace('"', r"\"")
+        )
+        for k, v in items
+    )
+    return "{" + body + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    # %.12g keeps full useful precision while collapsing float-noise
+    # edges like 1e-7*10**k -> "1e-07" instead of repr's 17 digits.
+    return f"{f:.12g}"
+
+
+def export_prometheus() -> str:
+    """All registered metrics in Prometheus text exposition format."""
+    with _lock:
+        items = sorted(_metrics.items())
+        types = dict(_types)
+    lines = []
+    seen_type = set()
+    for (name, _), m in items:
+        if name not in seen_type:
+            seen_type.add(name)
+            lines.append(f"# TYPE {name} {types[name]}")
+        if isinstance(m, Histogram):
+            for le, cum in m.cumulative():
+                lines.append(
+                    f"{name}_bucket"
+                    f"{_fmt_labels(m.labels, (('le', _fmt_value(le)),))}"
+                    f" {cum}"
+                )
+            lines.append(f"{name}_sum{_fmt_labels(m.labels)} {m.sum!r}")
+            lines.append(f"{name}_count{_fmt_labels(m.labels)} {m.count}")
+        else:
+            lines.append(
+                f"{name}{_fmt_labels(m.labels)} {_fmt_value(m.value)}"
+            )
+    return "\n".join(lines) + "\n" if lines else ""
+
+
+def export_prometheus_file(path: str) -> str:
+    """Write `export_prometheus()` to `path`; returns the path."""
+    with open(path, "w") as fh:
+        fh.write(export_prometheus())
+    return path
+
+
+def snapshot() -> dict:
+    """All registered metrics as one JSON-able dict.
+
+    Shape: ``{name: {type, series: [{labels, ...values}]}}`` — counters
+    and gauges carry ``value``; histograms carry ``buckets`` (le →
+    cumulative count), ``sum`` and ``count``.
+    """
+    with _lock:
+        items = sorted(_metrics.items())
+        types = dict(_types)
+    out: dict = {}
+    for (name, _), m in items:
+        entry = out.setdefault(
+            name, {"type": types[name], "series": []}
+        )
+        labels = {k: v for k, v in m.labels}
+        if isinstance(m, Histogram):
+            entry["series"].append(
+                {
+                    "labels": labels,
+                    "buckets": [
+                        {"le": _fmt_value(le), "count": cum}
+                        for le, cum in m.cumulative()
+                    ],
+                    "sum": m.sum,
+                    "count": m.count,
+                }
+            )
+        else:
+            entry["series"].append({"labels": labels, "value": m.value})
+    return out
+
+
+def export_json() -> str:
+    return json.dumps(snapshot(), indent=1, sort_keys=True)

@@ -1,0 +1,43 @@
+"""Process-wide observability switch.
+
+All of `repro.obs` is gated on one module-level flag so instrumented hot
+paths pay a single function call (returning a cached bool) when
+observability is off — no span objects, no metric lookups, no
+allocations. The flag starts from the ``REPRO_OBS`` environment variable
+(any value other than empty/``0``/``false`` enables) and can be toggled
+at runtime with `enable` / `disable`.
+
+Instrumentation that must *construct* data before recording (label
+dicts, host transfers of device scalars) should guard with
+``if obs.enabled():`` at the call site so the construction itself is
+skipped on the disabled path.
+"""
+from __future__ import annotations
+
+import os
+
+def _env_enabled() -> bool:
+    """Read ``REPRO_OBS``: anything but empty/0/false/no enables."""
+    return os.environ.get("REPRO_OBS", "").lower() not in (
+        "", "0", "false", "no",
+    )
+
+
+_enabled: bool = _env_enabled()
+
+
+def enabled() -> bool:
+    """Whether observability (spans, metrics, events) is recording."""
+    return _enabled
+
+
+def enable() -> None:
+    """Turn observability on for the rest of the process (idempotent)."""
+    global _enabled
+    _enabled = True
+
+
+def disable() -> None:
+    """Turn observability off; already-recorded data is kept."""
+    global _enabled
+    _enabled = False

@@ -1,0 +1,294 @@
+"""Span tracer: nestable, thread-safe, exportable.
+
+`trace(name)` is a context manager recording one wall-clock span;
+`traced(name)` is the decorator form (the enabled check happens at call
+time, so functions decorated while observability is off start tracing
+as soon as it is enabled). Spans nest through a thread-local stack and
+carry their parent id and depth, so the same records export both as
+Chrome ``trace_event`` JSON (chrome://tracing, Perfetto) and as an
+indented plain-text tree (`span_tree`).
+
+`instrument_jit` wraps a ``jax.jit``-ed callable so every call records a
+span split into ``name[compile]`` (the call populated a new executable —
+lowering + compilation + first run) vs ``name[run]`` (steady-state
+execution against a cached executable), using the jit cache size as the
+miss detector. While tracing it blocks until the outputs are ready so
+span durations measure device execution, not async dispatch — the
+tracer never injects host callbacks *inside* a traced computation.
+
+When observability is disabled (`repro.obs.state`), `trace` returns a
+shared no-op handle: no span objects, no lock traffic, no allocations.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import json
+import os
+import threading
+import time
+from typing import Callable, Optional
+
+from repro.obs import state
+
+_lock = threading.Lock()
+_spans: "list[Span]" = []          # finished spans, in completion order
+_instants: "list[dict]" = []       # point-in-time marks (obs.event)
+_ids = itertools.count(1)          # thread-safe under CPython
+_local = threading.local()
+
+
+def _stack() -> list:
+    st = getattr(_local, "stack", None)
+    if st is None:
+        st = _local.stack = []
+    return st
+
+
+class Span:
+    """One live-or-finished span. Use via ``with trace(name):``."""
+
+    __slots__ = (
+        "name", "attrs", "sid", "parent", "depth", "tid", "t_start", "t_end"
+    )
+
+    def __init__(self, name: str, attrs: "Optional[dict]" = None):
+        self.name = name
+        self.attrs = attrs
+        self.sid = 0
+        self.parent: "Optional[int]" = None
+        self.depth = 0
+        self.tid = 0
+        self.t_start = 0.0
+        self.t_end = 0.0
+
+    def set(self, key: str, value) -> None:
+        """Attach an attribute (exported in the Chrome trace ``args``)."""
+        if self.attrs is None:
+            self.attrs = {}
+        self.attrs[key] = value
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+    def __enter__(self) -> "Span":
+        stack = _stack()
+        self.sid = next(_ids)
+        self.tid = threading.get_ident()
+        if stack:
+            top = stack[-1]
+            self.parent = top.sid
+            self.depth = top.depth + 1
+        stack.append(self)
+        self.t_start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.t_end = time.perf_counter()
+        stack = _stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        with _lock:
+            _spans.append(self)
+        return False
+
+
+class _NoopSpan:
+    """Shared disabled-mode handle: enter/exit/set are free."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, key, value):
+        pass
+
+    @property
+    def duration(self) -> float:
+        return 0.0
+
+
+_NOOP = _NoopSpan()
+
+
+def trace(name: str, attrs: "Optional[dict]" = None):
+    """Context manager recording one span (no-op when obs is disabled).
+
+    Args:
+      name: span label (dots/brackets render fine in both exporters).
+      attrs: optional dict of attributes (Chrome trace ``args``).
+    """
+    if not state._enabled:
+        return _NOOP
+    return Span(name, attrs)
+
+
+def traced(name: "Optional[str]" = None, attrs: "Optional[dict]" = None):
+    """Decorator form of `trace`; checks the enable flag per call."""
+
+    def deco(fn: Callable) -> Callable:
+        label = name or fn.__qualname__
+
+        @functools.wraps(fn)
+        def wrapped(*args, **kw):
+            if not state._enabled:
+                return fn(*args, **kw)
+            with trace(label, dict(attrs) if attrs else None):
+                return fn(*args, **kw)
+
+        return wrapped
+
+    return deco
+
+
+def instrument_jit(fn: Callable, name: str) -> Callable:
+    """Wrap a jitted callable with compile-vs-run split spans.
+
+    Each call records ``name[compile]`` when it populated a new jit
+    executable (first call for a new input signature: lowering +
+    compilation + run) or ``name[run]`` for steady-state execution.
+    While tracing, the wrapper blocks until the outputs are ready so the
+    span covers device time; with observability disabled it forwards
+    with zero added work beyond one flag check.
+    """
+    cache_size = getattr(fn, "_cache_size", None)
+    n_calls = itertools.count()
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        if not state._enabled:
+            return fn(*args, **kw)
+        import jax
+
+        before = cache_size() if cache_size is not None else next(n_calls)
+        sp = Span(name)
+        with sp:
+            out = jax.block_until_ready(fn(*args, **kw))
+            after = cache_size() if cache_size is not None else before + 1
+            compiled = after > before
+            sp.name = f"{name}[compile]" if compiled else f"{name}[run]"
+            sp.set("compiled", compiled)
+        return out
+
+    return wrapped
+
+
+def add_instant(name: str, attrs: "Optional[dict]" = None) -> None:
+    """Record a point-in-time mark on the trace timeline (obs.event)."""
+    if not state._enabled:
+        return
+    rec = {
+        "name": name,
+        "ts": time.perf_counter(),
+        "tid": threading.get_ident(),
+        "attrs": dict(attrs) if attrs else {},
+    }
+    with _lock:
+        _instants.append(rec)
+
+
+def spans() -> "list[Span]":
+    """Snapshot of the finished spans recorded so far."""
+    with _lock:
+        return list(_spans)
+
+
+def reset() -> None:
+    """Drop all recorded spans and instant marks."""
+    with _lock:
+        _spans.clear()
+        _instants.clear()
+
+
+# ---------------------------------------------------------------------------
+# Exporters.
+# ---------------------------------------------------------------------------
+
+
+def _jsonable(v):
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return str(v)
+
+
+def chrome_trace() -> dict:
+    """The recorded spans as a Chrome ``trace_event`` JSON object.
+
+    Loadable by chrome://tracing and https://ui.perfetto.dev. Spans are
+    complete ('X') events with microsecond timestamps; instant marks
+    ('i') carry their fields as args. Timestamps are rebased to the
+    earliest recorded event so the trace starts near t=0.
+    """
+    with _lock:
+        done = list(_spans)
+        marks = list(_instants)
+    t0 = min(
+        [s.t_start for s in done] + [m["ts"] for m in marks], default=0.0
+    )
+    pid = os.getpid()
+    events = [
+        {
+            "name": s.name,
+            "cat": "repro",
+            "ph": "X",
+            "ts": (s.t_start - t0) * 1e6,
+            "dur": (s.t_end - s.t_start) * 1e6,
+            "pid": pid,
+            "tid": s.tid,
+            "args": {k: _jsonable(v) for k, v in (s.attrs or {}).items()},
+        }
+        for s in done
+    ]
+    events += [
+        {
+            "name": m["name"],
+            "cat": "repro",
+            "ph": "i",
+            "s": "t",
+            "ts": (m["ts"] - t0) * 1e6,
+            "pid": pid,
+            "tid": m["tid"],
+            "args": {k: _jsonable(v) for k, v in m["attrs"].items()},
+        }
+        for m in marks
+    ]
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def export_chrome_trace(path: str) -> str:
+    """Write `chrome_trace()` to `path`; returns the path."""
+    with open(path, "w") as fh:
+        json.dump(chrome_trace(), fh, indent=1)
+        fh.write("\n")
+    return path
+
+
+def span_tree() -> str:
+    """The recorded spans as an indented plain-text tree (per thread)."""
+    with _lock:
+        done = sorted(_spans, key=lambda s: (s.tid, s.t_start, s.sid))
+    if not done:
+        return "(no spans recorded)"
+    lines = []
+    threads = sorted({s.tid for s in done})
+    for tid in threads:
+        if len(threads) > 1:
+            lines.append(f"thread {tid}")
+        for s in done:
+            if s.tid != tid:
+                continue
+            extra = ""
+            if s.attrs:
+                extra = " " + " ".join(
+                    f"{k}={_jsonable(v)}" for k, v in s.attrs.items()
+                )
+            lines.append(
+                f"{'  ' * s.depth}{s.name:<40s} "
+                f"{(s.t_end - s.t_start) * 1e3:10.2f} ms{extra}"
+            )
+    return "\n".join(lines)

@@ -28,6 +28,7 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.digital import Params
 from repro.core.evaluate import stack_mapped, structure_key
 from repro.core.imac import (
@@ -236,9 +237,8 @@ def network_transient_stacked(
             layers=tuple(stats),
         )
 
-    return jax.jit(run)(
-        tuple(g_pos), tuple(g_neg), tuple(k), scal, x_probe
-    )
+    integrate = obs.instrument_jit(jax.jit(run), "transient_integrate")
+    return integrate(tuple(g_pos), tuple(g_neg), tuple(k), scal, x_probe)
 
 
 def run_transient(
@@ -289,28 +289,44 @@ def run_transient(
                 "(equal structure_key and vdd); got a mismatch — group "
                 "them with repro.explore.run_sweep(timing=...) instead"
             )
-    plans = build_plans(topology, cfg0)
-    dtype = cfg0.dtype
-    iters = [cfg0.gs_iters or suggest_iters(p.rows, p.cols) for p in plans]
-    mapped = [
-        map_network(params, c.resolved_tech(), v_unit=c.vdd, quantize=c.quantize)
-        for c in cfgs
-    ]
-    g_pos, g_neg, k = stack_mapped(mapped, dtype)
-    scal = dict(
-        r_seg=jnp.asarray([c.interconnect.r_segment for c in cfgs], dtype),
-        r_source=jnp.asarray([c.r_source for c in cfgs], dtype),
-        r_tia=jnp.asarray([c.r_tia for c in cfgs], dtype),
-        omega=jnp.asarray([c.sor_omega for c in cfgs], dtype),
-        c_seg=jnp.asarray([c.interconnect.c_segment for c in cfgs], dtype),
-        t_samp=jnp.asarray([c.t_sampling for c in cfgs], dtype),
-    )
-    x_probe = jnp.asarray(x[: spec.n_probe], dtype)
-    return network_transient_stacked(
-        g_pos, g_neg, k, scal, plans, cfg0.resolved_neuron(), spec,
-        x_probe, cfg0.vdd, iters, cfg0.gs_tol, dtype=dtype, record=record,
-        solve_options=solve_options,
-    )
+    with obs.trace(
+        "run_transient", {"configs": len(cfgs), "n_probe": spec.n_probe}
+    ):
+        plans = build_plans(topology, cfg0)
+        dtype = cfg0.dtype
+        iters = [
+            cfg0.gs_iters or suggest_iters(p.rows, p.cols) for p in plans
+        ]
+        with obs.trace("map", {"layers": len(plans)}):
+            mapped = [
+                map_network(
+                    params,
+                    c.resolved_tech(),
+                    v_unit=c.vdd,
+                    quantize=c.quantize,
+                )
+                for c in cfgs
+            ]
+            g_pos, g_neg, k = stack_mapped(mapped, dtype)
+        with obs.trace("stamp"):
+            scal = dict(
+                r_seg=jnp.asarray(
+                    [c.interconnect.r_segment for c in cfgs], dtype
+                ),
+                r_source=jnp.asarray([c.r_source for c in cfgs], dtype),
+                r_tia=jnp.asarray([c.r_tia for c in cfgs], dtype),
+                omega=jnp.asarray([c.sor_omega for c in cfgs], dtype),
+                c_seg=jnp.asarray(
+                    [c.interconnect.c_segment for c in cfgs], dtype
+                ),
+                t_samp=jnp.asarray([c.t_sampling for c in cfgs], dtype),
+            )
+        x_probe = jnp.asarray(x[: spec.n_probe], dtype)
+        return network_transient_stacked(
+            g_pos, g_neg, k, scal, plans, cfg0.resolved_neuron(), spec,
+            x_probe, cfg0.vdd, iters, cfg0.gs_tol, dtype=dtype,
+            record=record, solve_options=solve_options,
+        )
 
 
 def analytic_latency(cfg: IMACConfig, topology: "Sequence[int]") -> float:

@@ -28,6 +28,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.devices import apply_stuck_faults, sample_stuck_faults
 from repro.core.digital import Params
 from repro.core.evaluate import evaluate_batch
@@ -198,23 +199,33 @@ def run_variability(
         and spec.trials > 1
         and spec.is_deterministic_for(cfg.resolved_tech())
     )
-    if collapse:
-        keys = trial_keys(spec)[:1]
-    cfgs, mapped_stacked = expand_trials(params, cfg, spec, keys=keys)
-    if noise_key is None and cfgs[0].resolved_tech().read_noise_rel > 0.0:
-        noise_key = reliability_noise_key(spec)
-    results = evaluate_batch(
-        params,
-        x,
-        y,
-        cfgs,
-        n_samples=n_samples,
-        chunk=chunk,
-        noise_key=noise_key,
-        noise_per_config=True,
-        activation=activation,
-        mapped_stacked=mapped_stacked,
-    )
-    if collapse:
-        results = results * spec.trials
-    return summarize(results, acc_threshold=spec.acc_threshold)
+    with obs.trace(
+        "run_variability", {"trials": spec.trials, "collapsed": collapse}
+    ):
+        with obs.trace("sample_trials"):
+            if collapse:
+                keys = trial_keys(spec)[:1]
+            cfgs, mapped_stacked = expand_trials(
+                params, cfg, spec, keys=keys
+            )
+            if (
+                noise_key is None
+                and cfgs[0].resolved_tech().read_noise_rel > 0.0
+            ):
+                noise_key = reliability_noise_key(spec)
+        results = evaluate_batch(
+            params,
+            x,
+            y,
+            cfgs,
+            n_samples=n_samples,
+            chunk=chunk,
+            noise_key=noise_key,
+            noise_per_config=True,
+            activation=activation,
+            mapped_stacked=mapped_stacked,
+        )
+        with obs.trace("summarize"):
+            if collapse:
+                results = results * spec.trials
+            return summarize(results, acc_threshold=spec.acc_threshold)

@@ -336,6 +336,89 @@ def test_fused_fallback_notice_already_emitted(monkeypatch, caplog):
     assert not [r for r in caplog.records if "VMEM" in r.getMessage()]
 
 
+def test_fused_vmem_fallback_emits_obs_event(monkeypatch):
+    """Each VMEM-budget fallback records exactly one structured
+    backend_fallback event (cause=vmem_budget) and the solve actually
+    routes through the 'pallas' backend it names."""
+    import repro.core.backends as backends
+    import repro.kernels.gs_fused.ops as ops
+    from repro import obs
+
+    monkeypatch.setattr(ops, "fused_lane_block", lambda *a, **k: 0)
+    # Notice already emitted: proves the event is independent of the
+    # legacy once-per-process log guard (one event PER occurrence).
+    monkeypatch.setattr(ops, "_fallback_notice_emitted", True)
+
+    calls = []
+    real = backends._REGISTRY["pallas"]
+
+    def spy_factory(options):
+        calls.append(options)
+        return real.make_tridiag(options)
+
+    monkeypatch.setitem(
+        backends._REGISTRY,
+        "pallas",
+        SolverBackend(name="pallas", make_tridiag=spy_factory),
+    )
+
+    obs.enable()
+    obs.reset()
+    try:
+        g, v = _random_tile(jax.random.PRNGKey(56), 8, 8)
+        solve_crossbar(g, v, CP, options=_opts("fused"))
+        events = obs.events("backend_fallback")
+        vmem = [e for e in events if e["fields"]["cause"] == "vmem_budget"]
+        assert len(vmem) == 1, "one event per fallback occurrence"
+        assert vmem[0]["fields"]["from_backend"] == "fused"
+        assert vmem[0]["fields"]["to_backend"] == "pallas"
+        assert vmem[0]["fields"]["tile"] == "8x8"
+        assert calls, "event names 'pallas' but the solve never used it"
+        # A second fallback is a second occurrence -> a second event.
+        solve_crossbar(g, v, CP, options=_opts("fused"))
+        vmem = [
+            e
+            for e in obs.events("backend_fallback")
+            if e["fields"]["cause"] == "vmem_budget"
+        ]
+        assert len(vmem) == 2
+    finally:
+        obs.disable()
+        obs.reset()
+
+
+@pytest.mark.skipif(
+    __import__("repro.core.backends", fromlist=["on_tpu"]).on_tpu(),
+    reason="interpret auto-fallback only happens off-TPU",
+)
+def test_interpret_fallback_emits_obs_event_once(monkeypatch):
+    """The off-TPU interpret auto-fallback is a process-level condition:
+    exactly one backend_fallback event (cause=interpret_mode) no matter
+    how many resolutions happen, and the resolution itself holds."""
+    import repro.core.backends as backends
+    from repro import obs
+
+    monkeypatch.setattr(backends, "_interpret_notice_emitted", False)
+    obs.enable()
+    obs.reset()
+    try:
+        assert backends.resolve_interpret(None) is True
+        assert backends.resolve_interpret(None) is True
+        events = [
+            e
+            for e in obs.events("backend_fallback")
+            if e["fields"]["cause"] == "interpret_mode"
+        ]
+        assert len(events) == 1, "interpret event must fire once per process"
+        assert events[0]["fields"]["jax_backend"] == jax.default_backend()
+        # Explicit flags bypass the autodetect entirely: no new events.
+        assert backends.resolve_interpret(False) is False
+        assert len(obs.events("backend_fallback")) == 1
+    finally:
+        obs.disable()
+        obs.reset()
+
+
 @pytest.mark.skipif(
     __import__("repro.core.backends", fromlist=["on_tpu"]).on_tpu(),
     reason="interpret auto-fallback only happens off-TPU",

@@ -1,0 +1,287 @@
+"""Tests for repro.obs: tracer, metrics registry, exporters, overhead."""
+import importlib
+import json
+import threading
+import tracemalloc
+
+import pytest
+
+from repro import obs
+from repro.obs import metrics as obs_metrics
+
+# The package re-exports the trace() function under the submodule's
+# name, so reach the module itself through importlib.
+obs_trace = importlib.import_module("repro.obs.trace")
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Each test starts disabled with empty stores and leaves the same."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# Span tracer.
+# ---------------------------------------------------------------------------
+
+
+def test_nested_spans_record_parent_and_depth():
+    obs.enable()
+    with obs.trace("outer", {"k": 1}):
+        with obs.trace("inner"):
+            with obs.trace("leaf"):
+                pass
+        with obs.trace("sibling"):
+            pass
+    by_name = {s.name: s for s in obs.spans()}
+    assert set(by_name) == {"outer", "inner", "leaf", "sibling"}
+    assert by_name["outer"].parent is None
+    assert by_name["inner"].parent == by_name["outer"].sid
+    assert by_name["leaf"].parent == by_name["inner"].sid
+    assert by_name["sibling"].parent == by_name["outer"].sid
+    assert by_name["leaf"].depth == 2
+    assert by_name["outer"].duration >= by_name["inner"].duration
+    tree = obs.span_tree()
+    assert tree.splitlines()[0].startswith("outer")
+    assert "    leaf" in tree
+
+
+def test_traced_decorator_checks_flag_per_call():
+    calls = []
+
+    @obs.traced("decorated")
+    def fn(v):
+        calls.append(v)
+        return v * 2
+
+    assert fn(3) == 6          # disabled: no span
+    assert obs.spans() == []
+    obs.enable()
+    assert fn(4) == 8          # enabled later: spans appear
+    assert [s.name for s in obs.spans()] == ["decorated"]
+    assert calls == [3, 4]
+
+
+def test_span_set_attributes_appear_in_exports():
+    obs.enable()
+    with obs.trace("work") as sp:
+        sp.set("items", 7)
+    (span,) = obs.spans()
+    assert span.attrs == {"items": 7}
+    (ev,) = obs.chrome_trace()["traceEvents"]
+    assert ev["args"] == {"items": 7}
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    obs.enable()
+    with obs.trace("root", {"grid": "2x2"}):
+        with obs.trace("child"):
+            pass
+    obs.add_instant("mark", {"cause": "unit-test"})
+    path = tmp_path / "trace.json"
+    obs.export_chrome_trace(str(path))
+    loaded = json.loads(path.read_text())
+    events = loaded["traceEvents"]
+    complete = [e for e in events if e["ph"] == "X"]
+    instants = [e for e in events if e["ph"] == "i"]
+    assert {e["name"] for e in complete} == {"root", "child"}
+    assert [e["name"] for e in instants] == ["mark"]
+    for e in complete:
+        assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+    root = next(e for e in complete if e["name"] == "root")
+    child = next(e for e in complete if e["name"] == "child")
+    assert root["ts"] <= child["ts"]
+    assert child["ts"] + child["dur"] <= root["ts"] + root["dur"] + 1e-3
+
+
+def test_thread_safety_smoke():
+    obs.enable()
+
+    def worker(i):
+        for j in range(50):
+            with obs.trace(f"t{i}", {"j": j}):
+                obs.counter("thread_ops_total").inc()
+
+    threads = [
+        threading.Thread(target=worker, args=(i,)) for i in range(8)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    recorded = obs.spans()
+    assert len(recorded) == 8 * 50
+    # Nesting state is thread-local: every worker span is a root span.
+    assert all(s.parent is None for s in recorded)
+    assert obs.counter("thread_ops_total").value == 8 * 50
+    assert len({s.sid for s in recorded}) == len(recorded)
+
+
+def test_instrument_jit_splits_compile_and_run():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    obs.enable()
+    fn = obs.instrument_jit(jax.jit(lambda v: v * 2.0), "double")
+    x = jnp.arange(4.0)
+    fn(x)
+    fn(x)
+    fn(jnp.arange(8.0))  # new shape: fresh lowering + compile
+    names = [s.name for s in obs.spans()]
+    assert names == ["double[compile]", "double[run]", "double[compile]"]
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry.
+# ---------------------------------------------------------------------------
+
+
+def test_counter_and_gauge_basics():
+    obs.enable()
+    c = obs.counter("reqs_total", {"engine": "explore"})
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    assert obs.counter("reqs_total", {"engine": "explore"}) is c
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = obs.gauge("depth")
+    g.set(5)
+    g.inc()
+    assert g.value == 6
+
+
+def test_histogram_bucket_edges():
+    obs.enable()
+    h = obs.histogram("lat", buckets=obs.exponential_buckets(1.0, 2.0, 3))
+    assert h.edges == (1.0, 2.0, 4.0)
+    for v in (0.5, 1.0, 1.5, 4.0, 100.0):
+        h.observe(v)
+    # bisect_left: observations equal to an edge land in that bucket.
+    assert h.counts == [2, 1, 1, 1]
+    cum = h.cumulative()
+    assert cum == [(1.0, 2), (2.0, 3), (4.0, 4), (float("inf"), 5)]
+    assert h.count == 5
+    assert h.sum == pytest.approx(107.0)
+
+
+def test_exponential_buckets_validation():
+    assert obs.exponential_buckets(1e-2, 10.0, 3) == (1e-2, 1e-1, 1.0)
+    with pytest.raises(ValueError):
+        obs.exponential_buckets(0.0, 2.0, 4)
+    with pytest.raises(ValueError):
+        obs.exponential_buckets(1.0, 1.0, 4)
+
+
+def test_metric_kind_conflict_raises():
+    obs.enable()
+    obs.counter("x_total")
+    with pytest.raises(ValueError):
+        obs.gauge("x_total")
+
+
+def test_event_increments_labeled_counter_and_log():
+    obs.enable()
+    obs.event("backend_fallback", cause="vmem_budget", tile="512x512")
+    obs.event("backend_fallback", cause="vmem_budget", tile="512x512")
+    obs.event("backend_fallback", cause="interpret_mode", extra=[1, 2])
+    recs = obs.events("backend_fallback")
+    assert len(recs) == 3
+    assert recs[-1]["fields"]["extra"] == [1, 2]
+    exp = obs.export_prometheus()
+    assert (
+        'backend_fallback_total{cause="vmem_budget",tile="512x512"} 2' in exp
+    )
+    assert 'cause="interpret_mode"' in exp
+    # Events also mark the span timeline.
+    instants = [
+        e for e in obs.chrome_trace()["traceEvents"] if e["ph"] == "i"
+    ]
+    assert len(instants) == 3
+
+
+def test_prometheus_export_format():
+    obs.enable()
+    obs.counter("hits_total").inc(4)
+    h = obs.histogram("sw", buckets=(1.0, 2.0))
+    h.observe(1.5)
+    h.observe(10.0)
+    text = obs.export_prometheus()
+    lines = text.splitlines()
+    assert "# TYPE hits_total counter" in lines
+    assert "hits_total 4" in lines
+    assert "# TYPE sw histogram" in lines
+    assert 'sw_bucket{le="1"} 0' in lines
+    assert 'sw_bucket{le="2"} 1' in lines
+    assert 'sw_bucket{le="+Inf"} 2' in lines
+    assert "sw_sum 11.5" in lines
+    assert "sw_count 2" in lines
+
+
+def test_snapshot_json_round_trip():
+    obs.enable()
+    obs.counter("c_total", {"k": "v"}).inc()
+    obs.histogram("h", buckets=(1.0,)).observe(0.5)
+    snap = json.loads(obs.export_json())
+    assert snap["c_total"]["type"] == "counter"
+    assert snap["c_total"]["series"][0]["labels"] == {"k": "v"}
+    hseries = snap["h"]["series"][0]
+    assert hseries["count"] == 1
+    assert hseries["buckets"][0]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Disabled mode.
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_mode_returns_shared_noops_and_records_nothing():
+    assert obs.trace("x") is obs_trace._NOOP
+    assert obs.trace("y", {"a": 1}) is obs_trace._NOOP
+    assert obs.counter("c_total") is obs_metrics._NOOP
+    assert obs.histogram("h") is obs_metrics._NOOP
+    with obs.trace("x") as sp:
+        sp.set("k", "v")
+    obs.counter("c_total").inc()
+    obs.event("nothing", cause="disabled")
+    obs.add_instant("nothing")
+    obs.enable()
+    assert obs.spans() == []
+    assert obs.events() == []
+    assert obs.export_prometheus() == ""
+
+
+def test_disabled_mode_zero_allocations_on_hot_path():
+    c = obs.counter("hot_total")
+    span_fn, counter_fn = obs.trace, obs.counter
+    # Warm up any lazy interning, then measure.
+    for _ in range(10):
+        with span_fn("hot"):
+            c.inc()
+    tracemalloc.start()
+    for _ in range(1000):
+        with span_fn("hot"):
+            counter_fn("hot_total").inc()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    # The loop itself allocates nothing measurable: no span objects, no
+    # metric instances, no dicts (slack covers tracemalloc's own frame
+    # bookkeeping).
+    assert peak < 4096, f"disabled-mode hot path allocated {peak} bytes"
+
+
+def test_env_var_enables(monkeypatch):
+    from repro.obs import state
+
+    monkeypatch.setenv("REPRO_OBS", "1")
+    # Fresh evaluation of the env logic (module already imported).
+    assert state._env_enabled()
+    monkeypatch.setenv("REPRO_OBS", "0")
+    assert not state._env_enabled()
+    monkeypatch.delenv("REPRO_OBS")
+    assert not state._env_enabled()
