@@ -8,9 +8,11 @@ layer actually observed the run:
     samples only) and contains the key series;
   * the trace is valid trace_event JSON with complete ("X") spans,
     including at least one compile-phase and one steady-state
-    ``solve_chunk`` span.
+    ``solve_chunk`` span;
+  * any additional arguments are ``BENCH_<name>.json`` payloads checked
+    against the v2 schema (`validate_bench_payload`).
 
-Usage: python -m benchmarks.check_obs METRICS.prom TRACE.json
+Usage: python -m benchmarks.check_obs METRICS.prom TRACE.json [BENCH.json...]
 Exits non-zero with a message on the first missing invariant.
 """
 from __future__ import annotations
@@ -18,6 +20,20 @@ from __future__ import annotations
 import json
 import re
 import sys
+
+#: v2 BENCH_<name>.json: required metadata keys and their types.
+BENCH_REQUIRED = {
+    "schema_version": int,
+    "bench": str,
+    "ok": bool,
+    "git_sha": str,
+    "jax_version": str,
+    "jax_backend": str,
+    "device_platform": str,
+    "device_count": int,
+    "python_version": str,
+    "rows": list,
+}
 
 REQUIRED_SERIES = (
     "solver_sweeps",
@@ -47,7 +63,8 @@ def parse_prometheus(text: str) -> "dict[str, list[str]]":
         # _bucket/_sum/_count samples belong to their histogram family.
         family = re.sub(r"_(bucket|sum|count)$", "", name)
         families.setdefault(family, []).append(line)
-        families.setdefault(name, []).append(line)
+        if name != family:
+            families.setdefault(name, []).append(line)
     return families
 
 
@@ -90,11 +107,71 @@ def check_trace(path: str) -> None:
     )
 
 
+def validate_bench_payload(payload: dict) -> None:
+    """Assert a BENCH_<name>.json payload matches the v2 schema.
+
+    Raises ValueError naming the first violated invariant. Additive
+    keys (``git_dirty``, the embedded ``metrics`` snapshot) are allowed
+    — the schema only pins what trend tooling depends on.
+    """
+    if not isinstance(payload, dict):
+        raise ValueError(f"payload is {type(payload).__name__}, not an object")
+    for key, typ in BENCH_REQUIRED.items():
+        if key not in payload:
+            raise ValueError(f"missing required key {key!r}")
+        if not isinstance(payload[key], typ):
+            raise ValueError(
+                f"key {key!r} is {type(payload[key]).__name__}, "
+                f"expected {typ.__name__}"
+            )
+    if payload["schema_version"] < 2:
+        raise ValueError(
+            f"schema_version {payload['schema_version']} < 2"
+        )
+    if not payload["git_sha"]:
+        raise ValueError("git_sha is empty")
+    for i, row in enumerate(payload["rows"]):
+        if not isinstance(row, dict):
+            raise ValueError(f"rows[{i}] is not an object")
+        if not isinstance(row.get("name"), str) or not row["name"]:
+            raise ValueError(f"rows[{i}] has no name")
+        if not isinstance(row.get("us_per_call"), (int, float)) or isinstance(
+            row.get("us_per_call"), bool
+        ):
+            raise ValueError(f"rows[{i}] us_per_call is not a number")
+        if not isinstance(row.get("derived"), str):
+            raise ValueError(f"rows[{i}] derived is not a string")
+    metrics = payload.get("metrics")
+    if metrics is not None:
+        if not isinstance(metrics, dict):
+            raise ValueError("metrics snapshot is not an object")
+        for name, fam in metrics.items():
+            if not isinstance(fam, dict) or "type" not in fam or (
+                "series" not in fam
+            ):
+                raise ValueError(
+                    f"metrics[{name!r}] lacks type/series"
+                )
+
+
+def check_bench_json(path: str) -> None:
+    with open(path) as fh:
+        payload = json.load(fh)
+    try:
+        validate_bench_payload(payload)
+    except ValueError as e:
+        raise SystemExit(f"bench payload {path} violates the v2 schema: {e}")
+    print(f"ok: {path} matches the v2 BENCH schema "
+          f"({len(payload['rows'])} rows)")
+
+
 def main() -> None:
-    if len(sys.argv) != 3:
+    if len(sys.argv) < 3:
         raise SystemExit(__doc__)
     check_metrics(sys.argv[1])
     check_trace(sys.argv[2])
+    for path in sys.argv[3:]:
+        check_bench_json(path)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,113 @@
+"""Performance-regression gate over the run ledger (CI entry point).
+
+Compares the latest ledger entry of each benchmark against its history
+on the same backend/device (`repro.obs.regress`: median-of-last-N
+baseline, noise-aware thresholds from the historical spread) and prints
+one verdict per timing row. Exits non-zero when any row regresses —
+unless ``--report-only``, or the history is still shallower than
+``--enforce-after`` runs (the CI bootstrap mode: the gate observes
+silently until enough baseline entries exist, then starts enforcing
+without a workflow change).
+
+Usage:
+  python -m benchmarks.regress [--ledger PATH] [--bench NAME]
+      [--baseline-n N] [--min-ratio R] [--enforce-after N]
+      [--report-only]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+from repro.obs import ledger, regress
+
+
+def main(argv: "Optional[list[str]]" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.regress", description=__doc__
+    )
+    ap.add_argument(
+        "--ledger",
+        default=None,
+        help="ledger path (default: $REPRO_OBS_LEDGER or "
+        "artifacts/perf_ledger.jsonl)",
+    )
+    ap.add_argument("--bench", default=None, help="gate only this bench")
+    ap.add_argument(
+        "--baseline-n",
+        type=int,
+        default=5,
+        help="baseline = median of the last N matching runs",
+    )
+    ap.add_argument(
+        "--min-ratio",
+        type=float,
+        default=regress.MIN_RATIO,
+        help="minimum tolerated current/baseline ratio",
+    )
+    ap.add_argument(
+        "--enforce-after",
+        type=int,
+        default=0,
+        help="exit 0 despite regressions until at least N historical "
+        "runs back the baseline (CI bootstrap)",
+    )
+    ap.add_argument(
+        "--report-only",
+        action="store_true",
+        help="always exit 0; print verdicts only",
+    )
+    args = ap.parse_args(argv)
+
+    entries, skipped = ledger.load_report(args.ledger)
+    if skipped:
+        print(f"# skipped {skipped} corrupt ledger line(s)", file=sys.stderr)
+    if not entries:
+        print("ledger is empty — nothing to gate", file=sys.stderr)
+        return 0
+
+    benches = sorted({e.get("bench", "?") for e in entries})
+    if args.bench is not None:
+        if args.bench not in benches:
+            print(
+                f"no ledger entries for bench {args.bench!r}; "
+                f"present: {benches}",
+                file=sys.stderr,
+            )
+            return 2
+        benches = [args.bench]
+
+    failed = []
+    for bench in benches:
+        hist = ledger.matching(entries, bench=bench, ok_only=False)
+        latest = hist[-1]
+        verdicts = regress.compare(
+            latest,
+            hist,
+            n_baseline=args.baseline_n,
+            min_ratio=args.min_ratio,
+        )
+        depth = regress.baseline_depth(verdicts)
+        print(f"=== {bench} (run {latest.get('run_id')}, history depth "
+              f"{depth}) ===")
+        print(regress.format_table(verdicts))
+        gating = [v for v in verdicts if v.gating]
+        if gating:
+            if depth < args.enforce_after:
+                print(
+                    f"-> {len(gating)} regression(s) NOT enforced: history "
+                    f"depth {depth} < --enforce-after {args.enforce_after}"
+                )
+            else:
+                failed.extend((bench, v.row) for v in gating)
+
+    if failed:
+        print(f"\nREGRESSIONS: {failed}", file=sys.stderr)
+        return 0 if args.report_only else 1
+    print("\nno enforced regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,8 +21,24 @@ writes a Chrome trace_event JSON (load in chrome://tracing or Perfetto);
 exposition. Either flag also embeds the metrics snapshot in each
 ``BENCH_<name>.json``.
 
+Performance trajectory (repro.obs.ledger): every invocation appends one
+JSONL entry per selected bench — run id, git SHA + dirty flag,
+jax/device metadata, the timing rows, the metrics snapshot — to the
+run ledger (``--ledger PATH``, default ``$REPRO_OBS_LEDGER`` or
+``artifacts/perf_ledger.jsonl``; ``--no-ledger`` to skip). The ledger
+is the durable perf store the one-shot BENCH files never were: gate it
+with ``python -m benchmarks.regress`` and render it with
+``python -m repro.obs.report``.
+
+Deep profiling (repro.obs.prof): ``--jax-profile DIR`` (or
+``REPRO_OBS_JAX_PROFILE``) captures a jax.profiler device trace of the
+whole run; ``--cost`` (or ``REPRO_OBS_COST=1``) records per-jitted-fn
+HLO cost analysis (hlo_flops / achieved_flops_per_s gauges).
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table3,table4,...]
            [--trace trace.json] [--metrics-out metrics.prom]
+           [--ledger ledger.jsonl | --no-ledger] [--jax-profile DIR]
+           [--cost]
 """
 from __future__ import annotations
 
@@ -58,6 +74,20 @@ def _git_sha() -> str:
         return "unknown"
 
 
+def _git_dirty() -> "bool | None":
+    try:
+        proc = subprocess.run(
+            ["git", "status", "--porcelain"],
+            cwd=REPO_ROOT,
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+        return bool(proc.stdout.strip()) if proc.returncode == 0 else None
+    except Exception:
+        return None
+
+
 def _metadata() -> dict:
     import jax
 
@@ -65,6 +95,7 @@ def _metadata() -> dict:
     return {
         "schema_version": SCHEMA_VERSION,
         "git_sha": _git_sha(),
+        "git_dirty": _git_dirty(),
         "jax_version": jax.__version__,
         "jax_backend": jax.default_backend(),
         "device_platform": devices[0].platform if devices else "none",
@@ -109,12 +140,39 @@ def main() -> None:
         metavar="FILE",
         help="enable repro.obs and write a Prometheus text exposition",
     )
+    ap.add_argument(
+        "--ledger",
+        default=None,
+        metavar="FILE",
+        help="perf-ledger path (default: $REPRO_OBS_LEDGER or "
+        "artifacts/perf_ledger.jsonl)",
+    )
+    ap.add_argument(
+        "--no-ledger",
+        action="store_true",
+        help="do not append this run to the perf ledger",
+    )
+    ap.add_argument(
+        "--jax-profile",
+        default=None,
+        metavar="DIR",
+        help="capture a jax.profiler trace of the run into DIR "
+        "(also: REPRO_OBS_JAX_PROFILE)",
+    )
+    ap.add_argument(
+        "--cost",
+        action="store_true",
+        help="enable per-jitted-fn HLO cost analysis "
+        "(also: REPRO_OBS_COST=1)",
+    )
     args = ap.parse_args()
 
     from repro import obs
 
     if args.trace or args.metrics_out:
         obs.enable()
+    if args.cost:
+        obs.prof.enable_cost()
 
     from benchmarks import (
         deploy_report,
@@ -145,18 +203,41 @@ def main() -> None:
     from benchmarks import common
 
     meta = _metadata()
+    ledger_path = None if args.no_ledger else (
+        args.ledger or obs.ledger.default_path()
+    )
+
+    def _record(name: str, rows, ok: bool) -> None:
+        _write_json(name, rows, ok=ok, meta=meta)
+        if ledger_path is None:
+            return
+        try:
+            obs.ledger.record_run(
+                name,
+                rows,
+                ok=ok,
+                meta={k: v for k, v in meta.items()},
+                metrics=obs.snapshot() if obs.enabled() else None,
+                path=ledger_path,
+            )
+        except Exception as e:  # a broken ledger must not fail the bench
+            print(f"# ledger append failed: {e!r}", file=sys.stderr)
+
     print("name,us_per_call,derived")
     failures = []
-    for name in selected:
-        start = len(common.CSV_ROWS)
-        try:
-            with obs.trace(f"bench[{name}]"):
-                benches[name]()
-            _write_json(name, common.CSV_ROWS[start:], ok=True, meta=meta)
-        except Exception as e:  # keep the harness going; report at exit
-            traceback.print_exc()
-            failures.append((name, repr(e)))
-            _write_json(name, common.CSV_ROWS[start:], ok=False, meta=meta)
+    with obs.prof.jax_profile(args.jax_profile):
+        for name in selected:
+            start = len(common.CSV_ROWS)
+            try:
+                with obs.trace(f"bench[{name}]"):
+                    benches[name]()
+                _record(name, common.CSV_ROWS[start:], ok=True)
+            except Exception as e:  # keep the harness going; report at exit
+                traceback.print_exc()
+                failures.append((name, repr(e)))
+                _record(name, common.CSV_ROWS[start:], ok=False)
+    if ledger_path is not None:
+        print(f"# ledger appended: {ledger_path}", file=sys.stderr)
     if args.trace:
         obs.export_chrome_trace(args.trace)
         print(f"# trace written to {args.trace}", file=sys.stderr)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.obs import prof as obs_prof
 from repro.core.digital import Params, mlp_forward
 from repro.core.imac import IMACConfig, build_plans, layer_latency, linear_forward
 from repro.core.mapping import MappedLayer, map_network
@@ -368,6 +369,7 @@ def _evaluate_batch(
                 for c in cfgs
             ]
             g_pos, g_neg, k = stack_mapped(mapped_all, dtype)
+    obs_prof.sample_memory("map")
     with obs.trace("stamp"):
         scal = dict(
             r_seg=jnp.asarray(
@@ -461,7 +463,11 @@ def _evaluate_batch(
             jnp.stack(sweeps),                        # (L,)
         )
 
-    run_chunk = obs.instrument_jit(jax.jit(forward_all), "solve_chunk")
+    obs_prof.sample_memory("stamp")
+
+    # prof.instrument_jit = the tracer's compile-vs-run span split plus
+    # opt-in HLO cost analysis (hlo_flops / achieved_flops_per_s).
+    run_chunk = obs_prof.instrument_jit(jax.jit(forward_all), "solve_chunk")
 
     n_chunks = (n + chunk - 1) // chunk
     keys = (
@@ -480,6 +486,7 @@ def _evaluate_batch(
             powers.append(pwr * xb.shape[0])   # weight by chunk size
             residuals.append(res)
             layer_sweeps = swp                 # (L,), batch-wide per layer
+    obs_prof.sample_memory("solve")
     pred = jnp.concatenate(preds, axis=1)                      # (C, n)
     per_layer_power = jnp.sum(jnp.stack(powers), axis=0) / n   # (C, L)
     worst_res = jnp.max(jnp.stack(residuals), axis=0)          # (C, L)
@@ -552,6 +559,7 @@ def _evaluate_batch(
                     settled=settled,
                 )
             )
+    obs_prof.sample_memory("measure")
     return results
 
 

@@ -142,6 +142,7 @@ def run_sweep(
       One SweepResult per point, in input order.
     """
     items = _as_points(points)
+    t_run0 = time.perf_counter()
     with obs.trace("run_sweep", {"points": len(items)}):
         if timing:
             tspec = timing if isinstance(timing, TransientSpec) else TransientSpec()
@@ -305,6 +306,14 @@ def run_sweep(
                     if cache is not None:
                         cache.put(keys[i], res, name=name)
 
+        # Opt-in perf-trajectory entry (obs enabled + REPRO_OBS_LEDGER
+        # set): us/point with the metrics snapshot riding along.
+        obs.ledger.record_engine_run(
+            "run_sweep",
+            time.perf_counter() - t_run0,
+            count=len(items),
+            derived=f"points={len(items)};groups={len(groups)}",
+        )
         return [r for r in results if r is not None]
 
 

@@ -20,11 +20,19 @@ Everything is gated on one process-wide flag (`enable` / `disable` /
 ``REPRO_OBS=1``); when disabled, every entry point is a single flag
 check returning shared no-op handles — zero allocations on the hot
 path. See README § Observability.
+
+The continuous-performance tier lives in submodules: `repro.obs.ledger`
+(append-only JSONL run ledger), `repro.obs.regress` (noise-aware
+regression verdicts against the ledger history), `repro.obs.prof`
+(jax.profiler capture, device-memory watermarks, HLO cost analysis)
+and `repro.obs.report` (``python -m repro.obs.report`` dashboard). See
+README § Performance tracking.
 """
 from repro.obs.metrics import (
     DEFAULT_BUCKETS,
     RESIDUAL_BUCKETS,
     SECONDS_BUCKETS,
+    SNAPSHOT_QUANTILES,
     SWEEPS_BUCKETS,
     counter,
     event,
@@ -35,6 +43,7 @@ from repro.obs.metrics import (
     exponential_buckets,
     gauge,
     histogram,
+    quantile_from_cumulative,
     snapshot,
 )
 from repro.obs.metrics import reset as _reset_metrics
@@ -51,18 +60,21 @@ from repro.obs.trace import (
     traced,
 )
 from repro.obs.trace import reset as _reset_traces
+from repro.obs import ledger, prof, regress  # noqa: E402  (submodules)
 
 
 def reset() -> None:
     """Drop all recorded spans, events and metrics (keeps the flag)."""
     _reset_traces()
     _reset_metrics()
+    prof.reset_cost()
 
 
 __all__ = [
     "DEFAULT_BUCKETS",
     "RESIDUAL_BUCKETS",
     "SECONDS_BUCKETS",
+    "SNAPSHOT_QUANTILES",
     "SWEEPS_BUCKETS",
     "Span",
     "add_instant",
@@ -81,6 +93,10 @@ __all__ = [
     "gauge",
     "histogram",
     "instrument_jit",
+    "ledger",
+    "prof",
+    "quantile_from_cumulative",
+    "regress",
     "reset",
     "snapshot",
     "span_tree",

@@ -1,0 +1,297 @@
+"""Append-only performance-trajectory ledger (JSON Lines).
+
+One line per benchmark (or opt-in engine) run: run id, wall-clock
+timestamp, git SHA + dirty flag, jax/device metadata, the emitted
+``us_per_call`` rows and — when observability is on — the embedded
+metrics snapshot. The ledger is the durable perf trajectory that the
+one-shot ``BENCH_<name>.json`` files never were: ``benchmarks/run.py``
+appends to it on every invocation, ``benchmarks/regress.py`` compares
+the latest run against the history it accumulates, and
+``python -m repro.obs.report`` renders it as a dashboard.
+
+The format is deliberately boring: UTF-8 JSONL, one self-contained
+object per line, append-only (concurrent appenders interleave whole
+lines on POSIX). `load` skips corrupt lines instead of failing so a
+truncated write never poisons the trajectory.
+
+Path resolution: an explicit ``path`` argument, else the
+``REPRO_OBS_LEDGER`` environment variable, else
+``artifacts/perf_ledger.jsonl`` under the current directory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+import uuid
+from typing import Iterable, Optional
+
+#: Bumped when the per-line payload layout changes.
+ENTRY_SCHEMA = 1
+
+DEFAULT_LEDGER = os.path.join("artifacts", "perf_ledger.jsonl")
+
+#: Metadata keys a well-formed entry carries (regress matches runs on
+#: the environment subset so CPU history never gates a TPU run).
+ENV_KEYS = ("jax_backend", "device_platform", "device_count")
+
+
+def default_path() -> str:
+    """The ledger path: $REPRO_OBS_LEDGER, else artifacts/perf_ledger.jsonl."""
+    return os.environ.get("REPRO_OBS_LEDGER") or DEFAULT_LEDGER
+
+
+def _git(args: "list[str]") -> "Optional[str]":
+    try:
+        proc = subprocess.run(
+            ["git", *args], capture_output=True, text=True, timeout=10
+        )
+        if proc.returncode != 0:
+            return None
+        return proc.stdout
+    except Exception:
+        return None
+
+
+def git_state() -> "tuple[str, Optional[bool]]":
+    """(HEAD sha or "unknown", dirty flag or None when git is absent)."""
+    sha = (_git(["rev-parse", "HEAD"]) or "").strip() or "unknown"
+    status = _git(["status", "--porcelain"])
+    dirty = None if status is None else bool(status.strip())
+    return sha, dirty
+
+
+def run_metadata() -> dict:
+    """git + jax/device/python metadata for a ledger entry.
+
+    Mirrors the ``BENCH_<name>.json`` v2 metadata block; every field
+    degrades to "unknown"/None rather than raising so the ledger can be
+    written from environments without git or a usable jax backend.
+    """
+    import platform
+
+    sha, dirty = git_state()
+    meta = {
+        "git_sha": sha,
+        "git_dirty": dirty,
+        "python_version": platform.python_version(),
+        "jax_version": "unknown",
+        "jax_backend": "unknown",
+        "device_platform": "unknown",
+        "device_count": 0,
+    }
+    try:
+        import jax
+
+        devices = jax.devices()
+        meta.update(
+            jax_version=jax.__version__,
+            jax_backend=jax.default_backend(),
+            device_platform=devices[0].platform if devices else "none",
+            device_count=len(devices),
+        )
+    except Exception:
+        pass
+    return meta
+
+
+def _normalize_rows(rows) -> "list[dict]":
+    out = []
+    for r in rows:
+        if isinstance(r, dict):
+            out.append(
+                {
+                    "name": str(r["name"]),
+                    "us_per_call": float(r["us_per_call"]),
+                    "derived": str(r.get("derived", "")),
+                }
+            )
+        else:  # benchmarks.common.CSV_ROWS tuples
+            name, us, derived = r
+            out.append(
+                {
+                    "name": str(name),
+                    "us_per_call": float(us),
+                    "derived": str(derived),
+                }
+            )
+    return out
+
+
+def make_entry(
+    bench: str,
+    rows,
+    *,
+    ok: bool = True,
+    meta: "Optional[dict]" = None,
+    metrics: "Optional[dict]" = None,
+) -> dict:
+    """Build one ledger entry (not yet written).
+
+    Args:
+      bench: benchmark / engine name ("solver", "engine.run_sweep", ...).
+      rows: row dicts (name / us_per_call / derived) or the equivalent
+        (name, us, derived) tuples from benchmarks.common.CSV_ROWS.
+      ok: whether the run completed without raising.
+      meta: metadata dict (see `run_metadata`); gathered fresh if None.
+        A missing ``git_dirty`` is filled in from `git_state` so v2
+        BENCH metadata can be passed through unchanged.
+      metrics: a `repro.obs.snapshot()` dict to embed, or None.
+    """
+    meta = dict(meta) if meta is not None else run_metadata()
+    if "git_dirty" not in meta:
+        meta["git_dirty"] = git_state()[1]
+    meta.pop("schema_version", None)  # BENCH json versioning, not ours
+    now = time.time()
+    return {
+        "schema": ENTRY_SCHEMA,
+        "run_id": uuid.uuid4().hex[:12],
+        "ts_unix": now,
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime(now)),
+        "bench": str(bench),
+        "ok": bool(ok),
+        **meta,
+        "rows": _normalize_rows(rows),
+        "metrics": metrics,
+    }
+
+
+def append(entry: dict, path: "Optional[str]" = None) -> str:
+    """Append one entry as a single JSONL line; returns the path."""
+    path = path or default_path()
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    line = json.dumps(entry, sort_keys=True)
+    if "\n" in line:
+        raise ValueError("ledger entries must serialize to one line")
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write(line + "\n")
+    return path
+
+
+def record_run(
+    bench: str,
+    rows,
+    *,
+    ok: bool = True,
+    meta: "Optional[dict]" = None,
+    metrics: "Optional[dict]" = None,
+    path: "Optional[str]" = None,
+) -> dict:
+    """`make_entry` + `append`; returns the written entry."""
+    entry = make_entry(bench, rows, ok=ok, meta=meta, metrics=metrics)
+    append(entry, path)
+    return entry
+
+
+def load(path: "Optional[str]" = None) -> "list[dict]":
+    """All parseable entries, oldest first; missing file → empty list.
+
+    Corrupt lines (truncated writes, merge debris) are silently
+    dropped; use `load_report` when the caller wants the skip count.
+    """
+    return load_report(path)[0]
+
+
+def load_report(path: "Optional[str]" = None) -> "tuple[list[dict], int]":
+    """(entries, n_skipped_corrupt_lines)."""
+    path = path or default_path()
+    entries: "list[dict]" = []
+    skipped = 0
+    if not os.path.exists(path):
+        return entries, skipped
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except ValueError:
+                skipped += 1
+                continue
+            if isinstance(obj, dict) and "bench" in obj and "rows" in obj:
+                entries.append(obj)
+            else:
+                skipped += 1
+    return entries, skipped
+
+
+def matching(
+    entries: "Iterable[dict]",
+    *,
+    bench: "Optional[str]" = None,
+    env_of: "Optional[dict]" = None,
+    ok_only: bool = True,
+) -> "list[dict]":
+    """Filter entries by bench name and execution environment.
+
+    `env_of` is a reference entry (or metadata dict): candidates must
+    agree on every `ENV_KEYS` field so timings are only ever compared
+    within one backend/device population.
+    """
+    out = []
+    for e in entries:
+        if bench is not None and e.get("bench") != bench:
+            continue
+        if ok_only and not e.get("ok", False):
+            continue
+        if env_of is not None and any(
+            e.get(k) != env_of.get(k) for k in ENV_KEYS
+        ):
+            continue
+        out.append(e)
+    return out
+
+
+def row_values(entries: "Iterable[dict]", row: str) -> "list[float]":
+    """The us_per_call trajectory of one row across entries (in order)."""
+    vals = []
+    for e in entries:
+        for r in e.get("rows", ()):
+            if r.get("name") == row:
+                vals.append(float(r["us_per_call"]))
+                break
+    return vals
+
+
+def engine_opt_in() -> "Optional[str]":
+    """Ledger path for opt-in engine-run recording, or None.
+
+    Engines record a ledger entry per run only when *both* the
+    observability flag is on and ``REPRO_OBS_LEDGER`` names a path —
+    a plain `run_sweep` in a notebook never touches the filesystem.
+    """
+    from repro.obs import state
+
+    if not state._enabled:
+        return None
+    return os.environ.get("REPRO_OBS_LEDGER") or None
+
+
+def record_engine_run(
+    name: str, seconds: float, *, count: int = 1, derived: str = ""
+) -> "Optional[dict]":
+    """Record one engine invocation when `engine_opt_in` allows it.
+
+    Embeds the current metrics snapshot so solver telemetry accumulated
+    during the run (sweep histograms etc.) rides along with the timing.
+    """
+    path = engine_opt_in()
+    if path is None:
+        return None
+    from repro.obs import metrics as _metrics
+
+    row = {
+        "name": f"engine/{name}",
+        "us_per_call": seconds * 1e6 / max(count, 1),
+        "derived": derived,
+    }
+    return record_run(
+        f"engine.{name}",
+        [row],
+        metrics=_metrics.snapshot(),
+        path=path,
+    )

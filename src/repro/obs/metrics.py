@@ -60,6 +60,42 @@ RESIDUAL_BUCKETS = exponential_buckets(1e-10, 10.0, 12)
 #: Wall-clock seconds: 100 µs .. ~1.7 min, quadrupling.
 SECONDS_BUCKETS = exponential_buckets(1e-4, 4.0, 11)
 
+#: Quantiles surfaced on every histogram snapshot (p50/p95/p99).
+SNAPSHOT_QUANTILES = (0.5, 0.95, 0.99)
+
+
+def quantile_from_cumulative(
+    cum: "Sequence[tuple[float, int]]", q: float
+) -> "Optional[float]":
+    """Estimate the q-quantile from cumulative (le, count) pairs.
+
+    `cum` is `Histogram.cumulative()` output: ascending bucket edges
+    ending with ``(inf, total)``. Within the containing bucket the
+    estimate interpolates linearly between the bucket's lower and upper
+    edge (the lower edge of the first bucket is taken as 0, matching
+    Prometheus ``histogram_quantile`` semantics), so the error is
+    bounded by that bucket's width. Observations in the +Inf overflow
+    bucket clamp to the highest finite edge. Returns None on an empty
+    histogram.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    if not cum:
+        return None
+    total = cum[-1][1]
+    if total == 0:
+        return None
+    target = q * total
+    prev_edge, prev_cum = 0.0, 0
+    for edge, c in cum:
+        if c >= target and c > prev_cum:
+            if math.isinf(edge):
+                return prev_edge  # overflow: clamp to the top edge
+            frac = (target - prev_cum) / (c - prev_cum)
+            return prev_edge + frac * (edge - prev_edge)
+        prev_edge, prev_cum = (prev_edge if math.isinf(edge) else edge), c
+    return prev_edge
+
 
 def _labels_key(labels: "Optional[dict]") -> tuple:
     if not labels:
@@ -143,6 +179,20 @@ class Histogram:
                 out.append((edge, acc))
             out.append((math.inf, self.count))
         return out
+
+    def quantile(self, q: float) -> "Optional[float]":
+        """Interpolated q-quantile (see `quantile_from_cumulative`)."""
+        return quantile_from_cumulative(self.cumulative(), q)
+
+    def quantiles(
+        self, qs: "Sequence[float]" = SNAPSHOT_QUANTILES
+    ) -> "dict[str, Optional[float]]":
+        """{"p50": ..., "p95": ..., "p99": ...} (None when empty)."""
+        cum = self.cumulative()
+        return {
+            f"p{round(q * 100)}": quantile_from_cumulative(cum, q)
+            for q in qs
+        }
 
 
 class _Noop:
@@ -329,6 +379,7 @@ def snapshot() -> dict:
                     ],
                     "sum": m.sum,
                     "count": m.count,
+                    "quantiles": m.quantiles(),
                 }
             )
         else:

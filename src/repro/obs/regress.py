@@ -1,0 +1,172 @@
+"""Noise-aware performance-regression verdicts over the run ledger.
+
+Given the latest ledger entry for a benchmark and its history on the
+same backend/device, produce one `RowVerdict` per timing row:
+
+  * **baseline** — the median ``us_per_call`` of the last
+    ``n_baseline`` matching historical runs (median, not mean: one
+    noisy CI run must not drag the reference).
+  * **threshold** — derived from the historical spread: the relative
+    median-absolute-deviation widened by `k`, floored at `min_ratio`
+    so a perfectly-quiet history still tolerates scheduler jitter.
+    A row regresses when ``current > baseline * threshold`` and is an
+    improvement below ``baseline / threshold``.
+  * rows without history are ``new``; rows with fewer than
+    ``min_history`` observations are ``insufficient`` (never gate);
+    zero/negative timings (derived-only rows) are ``skipped``.
+
+`benchmarks/regress.py` is the CLI wrapper that turns verdicts into an
+exit code for CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Iterable, Optional
+
+from repro.obs import ledger
+
+#: Spread multiplier: threshold_ratio = 1 + K_SPREAD * (MAD / median).
+K_SPREAD = 6.0
+
+#: Minimum tolerated ratio even for a zero-spread history (±25%
+#: covers same-machine scheduler noise on µs-scale rows).
+MIN_RATIO = 1.25
+
+#: Rows need this many historical observations before they can gate.
+MIN_HISTORY = 2
+
+GATING = ("regression",)
+
+
+@dataclasses.dataclass(frozen=True)
+class RowVerdict:
+    """Comparison of one timing row against its ledger history."""
+
+    row: str
+    status: str  # ok | regression | improved | new | insufficient | skipped
+    current_us: float
+    baseline_us: "Optional[float]"
+    ratio: "Optional[float]"  # current / baseline
+    threshold: float  # tolerated ratio
+    n_history: int
+
+    @property
+    def gating(self) -> bool:
+        return self.status in GATING
+
+
+def noise_threshold(
+    values: "list[float]",
+    *,
+    min_ratio: float = MIN_RATIO,
+    k: float = K_SPREAD,
+) -> float:
+    """Tolerated current/baseline ratio given the historical spread."""
+    if len(values) < 2:
+        return min_ratio
+    med = statistics.median(values)
+    if med <= 0:
+        return min_ratio
+    mad = statistics.median(abs(v - med) for v in values)
+    return max(min_ratio, 1.0 + k * (mad / med))
+
+
+def judge_row(
+    row: str,
+    current_us: float,
+    history_us: "list[float]",
+    *,
+    n_baseline: int = 5,
+    min_ratio: float = MIN_RATIO,
+    k: float = K_SPREAD,
+    min_history: int = MIN_HISTORY,
+) -> RowVerdict:
+    """Verdict for one row given its raw historical trajectory."""
+    if current_us <= 0:
+        return RowVerdict(
+            row, "skipped", current_us, None, None, min_ratio,
+            len(history_us),
+        )
+    window = [v for v in history_us[-n_baseline:] if v > 0]
+    if not window:
+        return RowVerdict(
+            row, "new", current_us, None, None, min_ratio, 0
+        )
+    base = statistics.median(window)
+    thr = noise_threshold(window, min_ratio=min_ratio, k=k)
+    ratio = current_us / base
+    if len(window) < min_history:
+        status = "insufficient"
+    elif ratio > thr:
+        status = "regression"
+    elif ratio < 1.0 / thr:
+        status = "improved"
+    else:
+        status = "ok"
+    return RowVerdict(row, status, current_us, base, ratio, thr, len(window))
+
+
+def compare(
+    current: dict,
+    history: "Iterable[dict]",
+    *,
+    n_baseline: int = 5,
+    min_ratio: float = MIN_RATIO,
+    k: float = K_SPREAD,
+    min_history: int = MIN_HISTORY,
+) -> "list[RowVerdict]":
+    """Verdicts for every timing row of `current` against `history`.
+
+    History is pre-filtered to the current entry's bench and execution
+    environment (`ledger.ENV_KEYS`) and to runs that completed ok; the
+    current entry itself (by run_id) never counts as its own baseline.
+    """
+    past = [
+        e
+        for e in ledger.matching(
+            history, bench=current.get("bench"), env_of=current
+        )
+        if e.get("run_id") != current.get("run_id")
+    ]
+    past.sort(key=lambda e: e.get("ts_unix", 0.0))
+    verdicts = []
+    for r in current.get("rows", ()):
+        name = r["name"]
+        verdicts.append(
+            judge_row(
+                name,
+                float(r["us_per_call"]),
+                ledger.row_values(past, name),
+                n_baseline=n_baseline,
+                min_ratio=min_ratio,
+                k=k,
+                min_history=min_history,
+            )
+        )
+    return verdicts
+
+
+def has_regressions(verdicts: "Iterable[RowVerdict]") -> bool:
+    return any(v.gating for v in verdicts)
+
+
+def baseline_depth(verdicts: "Iterable[RowVerdict]") -> int:
+    """Deepest history any row was judged against (for auto-enforce)."""
+    return max((v.n_history for v in verdicts), default=0)
+
+
+def format_table(verdicts: "Iterable[RowVerdict]") -> str:
+    """Plain-text verdict table (one row per timing row)."""
+    lines = [
+        f"{'row':<44s} {'current':>12s} {'baseline':>12s} "
+        f"{'ratio':>7s} {'thresh':>7s} {'n':>3s}  verdict"
+    ]
+    for v in verdicts:
+        base = f"{v.baseline_us:.1f}" if v.baseline_us is not None else "—"
+        ratio = f"{v.ratio:.2f}" if v.ratio is not None else "—"
+        lines.append(
+            f"{v.row:<44s} {v.current_us:>12.1f} {base:>12s} "
+            f"{ratio:>7s} {v.threshold:>7.2f} {v.n_history:>3d}  {v.status}"
+        )
+    return "\n".join(lines)

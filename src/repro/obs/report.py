@@ -1,0 +1,229 @@
+"""Render the performance ledger as a text / markdown dashboard.
+
+``python -m repro.obs.report`` reads the JSONL run ledger
+(`repro.obs.ledger`) and prints, per benchmark:
+
+  * the latest run's provenance — run id, timestamp, git SHA (+dirty
+    marker), jax version/backend, device platform and count;
+  * one line per timing row: latest ``us_per_call``, the noise-aware
+    baseline verdict from `repro.obs.regress`, and the recent
+    trajectory (oldest → newest);
+  * the latest run's histogram quantiles (p50/p95/p99) from the
+    embedded metrics snapshot — solver sweeps, residuals, jit runtimes.
+
+Usage:
+  python -m repro.obs.report [--ledger PATH] [--bench NAME]
+                             [--last N] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+from typing import Optional
+
+from repro.obs import ledger, metrics, regress
+
+
+def _fmt_us(v: "Optional[float]") -> str:
+    if v is None:
+        return "—"
+    if v >= 1e6:
+        return f"{v / 1e6:.2f}s"
+    if v >= 1e3:
+        return f"{v / 1e3:.1f}ms"
+    return f"{v:.1f}us"
+
+
+def _fmt_q(v: "Optional[float]") -> str:
+    if v is None:
+        return "—"
+    if v != 0 and (abs(v) >= 1e4 or abs(v) < 1e-2):
+        return f"{v:.3g}"
+    return f"{v:.2f}"
+
+
+def _parse_le(le) -> float:
+    if isinstance(le, str) and le.strip() in ("+Inf", "Inf", "inf"):
+        return math.inf
+    return float(le)
+
+
+def series_quantiles(series: dict) -> "dict[str, Optional[float]]":
+    """p50/p95/p99 of one snapshot histogram series.
+
+    Prefers the precomputed ``quantiles`` block (snapshots written
+    since quantile support landed); falls back to recomputing from the
+    cumulative buckets so older ledger entries still render.
+    """
+    q = series.get("quantiles")
+    if isinstance(q, dict) and q:
+        return q
+    cum = [
+        (_parse_le(b["le"]), int(b["count"]))
+        for b in series.get("buckets", ())
+    ]
+    return {
+        f"p{round(qq * 100)}": metrics.quantile_from_cumulative(cum, qq)
+        for qq in metrics.SNAPSHOT_QUANTILES
+    }
+
+
+def _fmt_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(f"{k}={v}" for k, v in sorted(labels.items())) + "}"
+
+
+def _header(entry: dict, md: bool) -> "list[str]":
+    dirty = entry.get("git_dirty")
+    sha = str(entry.get("git_sha", "unknown"))[:12] + (
+        "+dirty" if dirty else ""
+    )
+    line = (
+        f"run {entry.get('run_id', '?')} at {entry.get('ts', '?')} — "
+        f"git {sha} — jax {entry.get('jax_version', '?')} "
+        f"[{entry.get('jax_backend', '?')}] — "
+        f"{entry.get('device_count', '?')}x "
+        f"{entry.get('device_platform', '?')}"
+    )
+    return [f"*{line}*" if md else line]
+
+
+def render_bench(
+    entries: "list[dict]", bench: str, *, last: int = 8, markdown: bool = False
+) -> "list[str]":
+    """Dashboard lines for one benchmark's trajectory."""
+    hist = ledger.matching(entries, bench=bench, ok_only=False)
+    if not hist:
+        return []
+    latest = hist[-1]
+    lines = []
+    lines.append(f"## {bench}" if markdown else f"=== {bench} ===")
+    lines += _header(latest, markdown)
+    verdicts = {v.row: v for v in regress.compare(latest, hist)}
+    ok_hist = ledger.matching(hist, bench=bench, env_of=latest)
+    if markdown:
+        lines.append("")
+        lines.append("| row | latest | baseline | verdict | trajectory |")
+        lines.append("|---|---|---|---|---|")
+    else:
+        lines.append(
+            f"  {'row':<44s} {'latest':>10s} {'baseline':>10s} "
+            f"{'verdict':<12s} trajectory"
+        )
+    for row in latest.get("rows", ()):
+        name = row["name"]
+        us = float(row["us_per_call"])
+        if us <= 0:
+            continue
+        v = verdicts.get(name)
+        base = _fmt_us(v.baseline_us) if v else "—"
+        status = v.status if v else "new"
+        traj = ledger.row_values(ok_hist, name)[-last:]
+        spark = " ".join(_fmt_us(t) for t in traj)
+        if markdown:
+            lines.append(
+                f"| `{name}` | {_fmt_us(us)} | {base} | {status} "
+                f"| {spark} |"
+            )
+        else:
+            lines.append(
+                f"  {name:<44s} {_fmt_us(us):>10s} {base:>10s} "
+                f"{status:<12s} {spark}"
+            )
+    qlines = quantile_lines(latest, markdown)
+    if qlines:
+        lines.append("")
+        lines.append(
+            "### histogram quantiles (latest run)"
+            if markdown
+            else "  histogram quantiles (latest run):"
+        )
+        lines += qlines
+    lines.append("")
+    return lines
+
+
+def quantile_lines(entry: dict, markdown: bool = False) -> "list[str]":
+    """p50/p95/p99 lines for every histogram in the embedded snapshot."""
+    snap = entry.get("metrics")
+    if not isinstance(snap, dict):
+        return []
+    out = []
+    for name in sorted(snap):
+        fam = snap[name]
+        if fam.get("type") != "histogram":
+            continue
+        for series in fam.get("series", ()):
+            if not series.get("count"):
+                continue
+            qs = series_quantiles(series)
+            body = " ".join(
+                f"{k}={_fmt_q(qs.get(k))}" for k in ("p50", "p95", "p99")
+            )
+            label = f"{name}{_fmt_labels(series.get('labels', {}))}"
+            if markdown:
+                out.append(f"- `{label}`: {body} (n={series['count']})")
+            else:
+                out.append(f"    {label:<40s} {body} (n={series['count']})")
+    return out
+
+
+def render(
+    entries: "list[dict]",
+    *,
+    bench: "Optional[str]" = None,
+    last: int = 8,
+    markdown: bool = False,
+) -> str:
+    """The full dashboard for a loaded ledger."""
+    if not entries:
+        return "(ledger is empty)"
+    benches = sorted({e.get("bench", "?") for e in entries})
+    if bench is not None:
+        benches = [b for b in benches if b == bench]
+        if not benches:
+            return f"(no ledger entries for bench {bench!r})"
+    title = "# Performance trajectory" if markdown else "PERFORMANCE TRAJECTORY"
+    lines = [title, ""]
+    for b in benches:
+        lines += render_bench(entries, b, last=last, markdown=markdown)
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def main(argv: "Optional[list[str]]" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report", description=__doc__
+    )
+    ap.add_argument(
+        "--ledger",
+        default=None,
+        help="ledger path (default: $REPRO_OBS_LEDGER or "
+        "artifacts/perf_ledger.jsonl)",
+    )
+    ap.add_argument("--bench", default=None, help="restrict to one bench")
+    ap.add_argument(
+        "--last", type=int, default=8, help="trajectory points per row"
+    )
+    ap.add_argument(
+        "--markdown", action="store_true", help="emit markdown instead of text"
+    )
+    args = ap.parse_args(argv)
+    entries, skipped = ledger.load_report(args.ledger)
+    if skipped:
+        print(f"# skipped {skipped} corrupt ledger line(s)", file=sys.stderr)
+    print(
+        render(
+            entries,
+            bench=args.bench,
+            last=args.last,
+            markdown=args.markdown,
+        ),
+        end="",
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

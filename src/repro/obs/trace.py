@@ -33,6 +33,7 @@ from repro.obs import state
 
 _lock = threading.Lock()
 _spans: "list[Span]" = []          # finished spans, in completion order
+_live: "dict[int, Span]" = {}      # open spans by sid (flushed on export)
 _instants: "list[dict]" = []       # point-in-time marks (obs.event)
 _ids = itertools.count(1)          # thread-safe under CPython
 _local = threading.local()
@@ -81,15 +82,23 @@ class Span:
             self.parent = top.sid
             self.depth = top.depth + 1
         stack.append(self)
+        with _lock:
+            _live[self.sid] = self
         self.t_start = time.perf_counter()
         return self
 
-    def __exit__(self, *exc) -> bool:
+    def __exit__(self, exc_type, exc, tb) -> bool:
         self.t_end = time.perf_counter()
+        if exc_type is not None:
+            # The exception keeps unwinding (we return False); the span
+            # records what killed its body so failed stages are visible
+            # in the exported trace instead of silently short.
+            self.set("error", f"{exc_type.__name__}: {exc}")
         stack = _stack()
         if stack and stack[-1] is self:
             stack.pop()
         with _lock:
+            _live.pop(self.sid, None)
             _spans.append(self)
         return False
 
@@ -198,10 +207,17 @@ def spans() -> "list[Span]":
         return list(_spans)
 
 
+def live_spans() -> "list[Span]":
+    """Snapshot of the spans currently open (entered, not yet exited)."""
+    with _lock:
+        return list(_live.values())
+
+
 def reset() -> None:
-    """Drop all recorded spans and instant marks."""
+    """Drop all recorded spans and instant marks (open spans too)."""
     with _lock:
         _spans.clear()
+        _live.clear()
         _instants.clear()
 
 
@@ -221,14 +237,20 @@ def chrome_trace() -> dict:
 
     Loadable by chrome://tracing and https://ui.perfetto.dev. Spans are
     complete ('X') events with microsecond timestamps; instant marks
-    ('i') carry their fields as args. Timestamps are rebased to the
+    ('i') carry their fields as args. Still-open spans are flushed as
+    complete events truncated at export time and tagged
+    ``unfinished=true`` — a crash mid-pipeline must not drop the very
+    spans that show where it died. Timestamps are rebased to the
     earliest recorded event so the trace starts near t=0.
     """
+    now = time.perf_counter()
     with _lock:
         done = list(_spans)
+        open_ = list(_live.values())
         marks = list(_instants)
     t0 = min(
-        [s.t_start for s in done] + [m["ts"] for m in marks], default=0.0
+        [s.t_start for s in done + open_] + [m["ts"] for m in marks],
+        default=0.0,
     )
     pid = os.getpid()
     events = [
@@ -243,6 +265,22 @@ def chrome_trace() -> dict:
             "args": {k: _jsonable(v) for k, v in (s.attrs or {}).items()},
         }
         for s in done
+    ]
+    events += [
+        {
+            "name": s.name,
+            "cat": "repro",
+            "ph": "X",
+            "ts": (s.t_start - t0) * 1e6,
+            "dur": (now - s.t_start) * 1e6,
+            "pid": pid,
+            "tid": s.tid,
+            "args": {
+                **{k: _jsonable(v) for k, v in (s.attrs or {}).items()},
+                "unfinished": True,
+            },
+        }
+        for s in open_
     ]
     events += [
         {

@@ -1,0 +1,153 @@
+"""Unit tests for benchmarks/check_obs.py: the Prometheus text parser
+and the v2 BENCH json schema, validated against committed fixtures
+(promoted from CI-smoke-only coverage)."""
+import copy
+import json
+import os
+
+import pytest
+
+check_obs = pytest.importorskip(
+    "benchmarks.check_obs", reason="benchmarks/ needs repo-root cwd"
+)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+@pytest.fixture()
+def bench_payload():
+    with open(os.path.join(FIXTURES, "bench_v2_fixture.json")) as fh:
+        return json.load(fh)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus parser.
+# ---------------------------------------------------------------------------
+
+
+def test_parser_accepts_committed_fixture():
+    with open(os.path.join(FIXTURES, "obs_metrics_fixture.prom")) as fh:
+        families = check_obs.parse_prometheus(fh.read())
+    for series in check_obs.REQUIRED_SERIES:
+        assert series in families, f"fixture lost key series {series}"
+    # Histogram child samples fold into their family.
+    assert any(
+        "_bucket" in line for line in families["solver_sweeps"]
+    )
+
+
+def test_parser_parses_labels_and_special_values():
+    text = (
+        "# TYPE x counter\n"
+        'x{a="1",b="two"} 4\n'
+        "# TYPE h histogram\n"
+        'h_bucket{le="+Inf"} 2\n'
+        "h_sum 11.5\n"
+        "h_count 2\n"
+        "g -3.5e-07\n"
+    )
+    families = check_obs.parse_prometheus(text)
+    assert families["x"] == ['x{a="1",b="two"} 4']
+    assert set(families["h"]) == {
+        'h_bucket{le="+Inf"} 2', "h_sum 11.5", "h_count 2"
+    }
+    assert "g" in families
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "not a sample line",
+        "name{unclosed 4",
+        "name 1 2 3trailing",
+        "{nameless} 4",
+    ],
+)
+def test_parser_rejects_malformed_lines(bad):
+    with pytest.raises(ValueError, match="not a valid sample"):
+        check_obs.parse_prometheus(f"# TYPE ok counter\nok 1\n{bad}\n")
+
+
+def test_parser_skips_comments_and_blanks():
+    assert check_obs.parse_prometheus("\n# HELP foo\n\n# TYPE foo gauge\n") == {}
+
+
+def test_check_metrics_missing_series_exits(tmp_path):
+    path = tmp_path / "m.prom"
+    path.write_text("# TYPE other counter\nother 1\n")
+    with pytest.raises(SystemExit, match="missing key series"):
+        check_obs.check_metrics(str(path))
+
+
+# ---------------------------------------------------------------------------
+# v2 BENCH json schema.
+# ---------------------------------------------------------------------------
+
+
+def test_fixture_payload_is_valid(bench_payload):
+    check_obs.validate_bench_payload(bench_payload)  # must not raise
+    assert bench_payload["schema_version"] == 2
+    # The committed fixture carries an embedded metrics snapshot with
+    # quantiles — the shape the report CLI renders.
+    series = bench_payload["metrics"]["solver_sweeps"]["series"][0]
+    assert series["quantiles"]["p50"] is not None
+
+
+def test_check_bench_json_on_fixture_file(capsys):
+    check_obs.check_bench_json(
+        os.path.join(FIXTURES, "bench_v2_fixture.json")
+    )
+    assert "matches the v2 BENCH schema" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize(
+    "mutate,match",
+    [
+        (lambda p: p.pop("git_sha"), "missing required key 'git_sha'"),
+        (lambda p: p.update(git_sha=""), "git_sha is empty"),
+        (lambda p: p.update(schema_version=1), "schema_version 1 < 2"),
+        (lambda p: p.update(schema_version="2"), "key 'schema_version'"),
+        (lambda p: p.update(ok="yes"), "key 'ok'"),
+        (lambda p: p.pop("rows"), "missing required key 'rows'"),
+        (lambda p: p["rows"].append({"name": "x"}), "us_per_call"),
+        (
+            lambda p: p["rows"].append(
+                {"name": "", "us_per_call": 1.0, "derived": ""}
+            ),
+            "has no name",
+        ),
+        (
+            lambda p: p["rows"].append(
+                {"name": "x", "us_per_call": True, "derived": ""}
+            ),
+            "us_per_call is not a number",
+        ),
+        (lambda p: p.update(metrics=[1, 2]), "metrics snapshot"),
+        (lambda p: p.update(metrics={"m": {"series": []}}), "lacks type"),
+    ],
+)
+def test_schema_mutations_rejected(bench_payload, mutate, match):
+    payload = copy.deepcopy(bench_payload)
+    mutate(payload)
+    with pytest.raises(ValueError, match=match):
+        check_obs.validate_bench_payload(payload)
+
+
+def test_schema_allows_additive_keys(bench_payload):
+    payload = copy.deepcopy(bench_payload)
+    payload["git_dirty"] = True
+    payload["future_field"] = {"anything": 1}
+    check_obs.validate_bench_payload(payload)
+
+
+def test_schema_allows_null_metrics(bench_payload):
+    payload = copy.deepcopy(bench_payload)
+    payload["metrics"] = None
+    check_obs.validate_bench_payload(payload)
+
+
+def test_check_bench_json_bad_file_exits(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"bench": "x"}))
+    with pytest.raises(SystemExit, match="violates the v2 schema"):
+        check_obs.check_bench_json(str(path))

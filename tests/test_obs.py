@@ -122,6 +122,68 @@ def test_thread_safety_smoke():
     assert len({s.sid for s in recorded}) == len(recorded)
 
 
+def test_span_records_error_attribute_when_body_raises():
+    obs.enable()
+    with pytest.raises(RuntimeError, match="boom"):
+        with obs.trace("outer"):
+            with obs.trace("failing"):
+                raise RuntimeError("boom")
+    by_name = {s.name: s for s in obs.spans()}
+    assert by_name["failing"].attrs["error"] == "RuntimeError: boom"
+    # The exception unwound through the parent too — both are closed,
+    # both carry the error, and nesting state is intact for new spans.
+    assert by_name["outer"].attrs["error"] == "RuntimeError: boom"
+    with obs.trace("after"):
+        pass
+    assert {s.name: s.parent for s in obs.spans()}["after"] is None
+
+
+def test_span_error_survives_existing_attrs():
+    obs.enable()
+    with pytest.raises(ValueError):
+        with obs.trace("work", {"items": 3}):
+            raise ValueError("bad input")
+    (span,) = obs.spans()
+    assert span.attrs["items"] == 3
+    assert span.attrs["error"].startswith("ValueError")
+
+
+def test_chrome_exporter_flushes_open_spans():
+    obs.enable()
+    outer = obs.trace("outer")
+    outer.__enter__()
+    with obs.trace("closed"):
+        pass
+    events = obs.chrome_trace()["traceEvents"]
+    by_name = {e["name"]: e for e in events if e["ph"] == "X"}
+    assert set(by_name) == {"outer", "closed"}
+    assert by_name["outer"]["args"]["unfinished"] is True
+    assert "unfinished" not in by_name["closed"]["args"]
+    assert by_name["outer"]["dur"] >= by_name["closed"]["dur"]
+    # Closing the span moves it to the finished list: no double export.
+    outer.__exit__(None, None, None)
+    events = obs.chrome_trace()["traceEvents"]
+    outers = [e for e in events if e["name"] == "outer"]
+    assert len(outers) == 1
+    assert "unfinished" not in outers[0]["args"]
+    assert obs_trace.live_spans() == []
+
+
+def test_export_chrome_trace_with_open_span_round_trips(tmp_path):
+    obs.enable()
+    sp = obs.trace("crashing_stage")
+    sp.__enter__()
+    path = tmp_path / "trace.json"
+    obs.export_chrome_trace(str(path))
+    loaded = json.loads(path.read_text())
+    (ev,) = [
+        e for e in loaded["traceEvents"] if e["name"] == "crashing_stage"
+    ]
+    assert ev["args"]["unfinished"] is True
+    assert ev["dur"] >= 0.0
+    sp.__exit__(None, None, None)
+
+
 def test_instrument_jit_splits_compile_and_run():
     jax = pytest.importorskip("jax")
     import jax.numpy as jnp
@@ -168,6 +230,73 @@ def test_histogram_bucket_edges():
     assert cum == [(1.0, 2), (2.0, 3), (4.0, 4), (float("inf"), 5)]
     assert h.count == 5
     assert h.sum == pytest.approx(107.0)
+
+
+def test_histogram_quantiles_within_bucket_edge_error():
+    np = pytest.importorskip("numpy")
+
+    obs.enable()
+    h = obs.histogram(
+        "lat_q", buckets=obs.exponential_buckets(1.0, 2.0, 12)
+    )
+    rng = np.random.default_rng(0)
+    vals = rng.uniform(0.5, 900.0, size=2000)
+    for v in vals:
+        h.observe(float(v))
+    edges = (0.0,) + h.edges
+    for q in (0.5, 0.95, 0.99):
+        est = h.quantile(q)
+        exact = float(np.quantile(vals, q))
+        # The estimate must land in the same bucket as the exact value,
+        # i.e. within that bucket's width of it.
+        idx = int(np.searchsorted(edges, exact, side="left"))
+        width = edges[min(idx, len(edges) - 1)] - edges[max(idx - 1, 0)]
+        assert abs(est - exact) <= width, (q, est, exact, width)
+
+
+def test_histogram_quantile_exact_edges_and_interpolation():
+    obs.enable()
+    h = obs.histogram("q_edges", buckets=(1.0, 2.0, 4.0))
+    for v in (2.0, 2.0, 4.0, 4.0):
+        h.observe(v)
+    # All mass sits on the (1,2] and (2,4] buckets: p50 = the 2.0 edge.
+    assert h.quantile(0.5) == pytest.approx(2.0)
+    # p100 = upper edge of the last occupied bucket.
+    assert h.quantile(1.0) == pytest.approx(4.0)
+    # Halfway into the second bucket's mass: linear interpolation.
+    assert 2.0 < h.quantile(0.75) <= 4.0
+
+
+def test_histogram_quantile_overflow_clamps_to_top_edge():
+    obs.enable()
+    h = obs.histogram("q_over", buckets=(1.0, 2.0))
+    h.observe(1000.0)
+    h.observe(2000.0)
+    assert h.quantile(0.5) == pytest.approx(2.0)
+    assert h.quantiles()["p99"] == pytest.approx(2.0)
+
+
+def test_histogram_quantile_empty_and_validation():
+    obs.enable()
+    h = obs.histogram("q_empty", buckets=(1.0,))
+    assert h.quantile(0.5) is None
+    assert h.quantiles() == {"p50": None, "p95": None, "p99": None}
+    h.observe(0.5)
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    assert obs.quantile_from_cumulative([], 0.5) is None
+
+
+def test_snapshot_surfaces_quantiles():
+    obs.enable()
+    h = obs.histogram("snap_q", buckets=(1.0, 2.0, 4.0))
+    for v in (1.5, 1.5, 3.0, 3.0):
+        h.observe(v)
+    snap = json.loads(obs.export_json())
+    series = snap["snap_q"]["series"][0]
+    assert set(series["quantiles"]) == {"p50", "p95", "p99"}
+    assert 1.0 <= series["quantiles"]["p50"] <= 2.0
+    assert 2.0 < series["quantiles"]["p99"] <= 4.0
 
 
 def test_exponential_buckets_validation():
