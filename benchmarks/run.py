@@ -91,6 +91,8 @@ def _git_dirty() -> "bool | None":
 def _metadata() -> dict:
     import jax
 
+    from repro.obs import ledger
+
     devices = jax.devices()
     return {
         "schema_version": SCHEMA_VERSION,
@@ -100,6 +102,11 @@ def _metadata() -> dict:
         "jax_backend": jax.default_backend(),
         "device_platform": devices[0].platform if devices else "none",
         "device_count": len(devices),
+        # "data8" under a sharded-bench process ($REPRO_MESH_SHAPE or an
+        # engine mesh_context); None on single-device runs. Part of the
+        # regress env-matching key so sharded timings never gate
+        # single-device baselines.
+        "mesh_shape": ledger.current_mesh_context(),
         "python_version": platform.python_version(),
     }
 

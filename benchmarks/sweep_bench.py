@@ -23,6 +23,14 @@ numerical cross-check that all paths agree. BENCH_SWEEP_SAMPLES
 (default 4) controls samples per evaluation — the regime a design-space
 sweep targets is many configurations x few samples, where per-config
 retracing dominates.
+
+Multi-device axis: on hosts with more than one JAX device (e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the bench also
+times one large structure group through `run_sweep(shard=...)` at
+device counts 1, 2 and all, and emits a ``sweep/shard_speedup`` row.
+``BENCH_SHARD_MIN_SPEEDUP`` (unset = report-only) turns the all-devices
+speedup into a hard assertion — the CI mesh-smoke job sets it.
+``BENCH_SHARD_CONFIGS`` / ``BENCH_SHARD_SAMPLES`` size the workload.
 """
 from __future__ import annotations
 
@@ -42,6 +50,9 @@ from repro.core.imac import IMACNetwork
 from repro.explore import pareto_front, run_sweep
 
 N_SWEEP_SAMPLES = int(os.environ.get("BENCH_SWEEP_SAMPLES", "4"))
+N_SHARD_CONFIGS = int(os.environ.get("BENCH_SHARD_CONFIGS", "16"))
+N_SHARD_SAMPLES = int(os.environ.get("BENCH_SHARD_SAMPLES", "64"))
+MIN_SHARD_SPEEDUP = float(os.environ.get("BENCH_SHARD_MIN_SPEEDUP", "0"))
 
 
 def cross_product():
@@ -209,7 +220,68 @@ def run():
             f"WARNING: engine speedup {speedup_seed:.2f}x vs the seed "
             f"per-config loop is below the 3x target"
         )
+    _shard_axis(params, xte, yte)
     return batched
+
+
+def _shard_axis(params, xte, yte):
+    """Device-count scaling of the sharded engine on ONE structure group.
+
+    Times the same sweep unsharded (the 1-device reference) and sharded
+    at 2 and all devices. The workload is one large group (every config
+    shares the default structure) so the stacked solve is the whole
+    run; samples >> configs keeps steady-state chunk execution — not
+    the one-time trace/compile — dominant.
+    """
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        emit(
+            "sweep/shard_speedup",
+            0.0,
+            f"x=1.00;devices={n_dev};skipped=single_device_host",
+        )
+        return
+    from repro.distributed.sweep import MeshPlan
+
+    techs = ("MRAM", "RRAM", "CBRAM", "PCM")
+    base = cross_product()[0][1]
+    items = [
+        (
+            f"{techs[i % len(techs)]}/r{5.0 + 0.5 * (i // len(techs)):g}",
+            dataclasses.replace(
+                base,
+                tech=techs[i % len(techs)],
+                r_tia=5.0 + 0.5 * (i // len(techs)),
+            ),
+        )
+        for i in range(N_SHARD_CONFIGS)
+    ]
+    n, ch = N_SHARD_SAMPLES, max(1, N_SHARD_SAMPLES // 4)
+    times = {}
+    for d in sorted({1, 2, n_dev}):
+        shard = None if d == 1 else MeshPlan(devices=d, min_group=2)
+        t0 = time.perf_counter()
+        run_sweep(params, xte, yte, items, n_samples=n, chunk=ch,
+                  shard=shard)
+        times[d] = time.perf_counter() - t0
+        emit(
+            f"sweep/shard_d{d}",
+            times[d] / len(items) * 1e6,
+            f"total_s={times[d]:.2f};devices={d};configs={len(items)};"
+            f"samples={n};points_per_s={len(items) / times[d]:.2f}",
+        )
+    speedup = times[1] / times[n_dev]
+    gate = MIN_SHARD_SPEEDUP if MIN_SHARD_SPEEDUP > 0 else "report-only"
+    emit(
+        "sweep/shard_speedup",
+        0.0,
+        f"x={speedup:.2f};devices={n_dev};min={gate}",
+    )
+    if MIN_SHARD_SPEEDUP > 0 and speedup < MIN_SHARD_SPEEDUP:
+        raise AssertionError(
+            f"sharded sweep speedup {speedup:.2f}x on {n_dev} devices is "
+            f"below the BENCH_SHARD_MIN_SPEEDUP={MIN_SHARD_SPEEDUP:g} gate"
+        )
 
 
 if __name__ == "__main__":

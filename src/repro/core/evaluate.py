@@ -20,6 +20,7 @@ from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import obs
 from repro.obs import prof as obs_prof
@@ -27,6 +28,13 @@ from repro.core.digital import Params, mlp_forward
 from repro.core.imac import IMACConfig, build_plans, layer_latency, linear_forward
 from repro.core.mapping import MappedLayer, map_network
 from repro.core.solver import CircuitParams, SolveOptions, suggest_iters
+from repro.distributed.compat import shard_map_compat
+from repro.distributed.sweep import (
+    MeshPlan,
+    pad_count,
+    pad_stacked,
+    stacked_spec,
+)
 
 
 class IMACResult(NamedTuple):
@@ -217,6 +225,7 @@ def evaluate_batch(
     mapped: Optional[list] = None,
     mapped_stacked: Optional[list] = None,
     solve_options: Optional[SolveOptions] = None,
+    mesh_plan: Optional[MeshPlan] = None,
 ) -> "list[IMACResult]":
     """Evaluate many structurally-compatible IMAC configurations at once.
 
@@ -263,6 +272,20 @@ def evaluate_batch(
       solve_options: circuit-solver backend selection
         (`core.solver.SolveOptions`); None = the process default
         ($REPRO_SOLVER_BACKEND, else "scan").
+      mesh_plan: shard the stacked config axis across a device mesh
+        (`repro.distributed.sweep.MeshPlan`). The batch is padded to a
+        multiple of the mesh axis by replicating entry 0 and the chunk
+        solve runs under `shard_map` with a cross-shard convergence
+        pmax — the circuit-solve path (parasitics=True) is
+        bitwise-identical to the unsharded batch; the ideal-MVM path
+        (parasitics=False) reproduces predictions/accuracy bitwise but
+        its power einsum is shape-sensitive on XLA CPU, so power agrees
+        only to float32 reassociation (~1e-7 relative).
+        Falls back to single-device execution when the batch is smaller
+        than `mesh_plan.min_group` or when per-config read-noise draws
+        (`noise_per_config` with a `noise_key`) would change under
+        sharding. The transient integration (cfg.transient) always runs
+        unsharded. None = no sharding (default).
 
     Returns:
       One IMACResult per configuration, in input order.
@@ -290,7 +313,27 @@ def evaluate_batch(
             mapped=mapped,
             mapped_stacked=mapped_stacked,
             solve_options=solve_options,
+            mesh_plan=mesh_plan,
         )
+
+
+def _resolve_shard(mesh_plan, n_cfgs, noise_per_config, noise_key):
+    """(mesh, axis, n_shards) when the batch should shard, else None.
+
+    Per-config read-noise draws (`noise_per_config` + a key) depend on
+    the full stacked shape — a shard would re-draw per local lane and
+    diverge from the unsharded batch, so those fall back (recorded as a
+    `shard_fallback` event).
+    """
+    if mesh_plan is None:
+        return None
+    if noise_per_config and noise_key is not None:
+        obs.event("shard_fallback", cause="noise_per_config")
+        return None
+    if n_cfgs < mesh_plan.min_group:
+        return None
+    mesh = mesh_plan.build()
+    return mesh, mesh_plan.axis, mesh.shape[mesh_plan.axis]
 
 
 def _evaluate_batch(
@@ -308,6 +351,7 @@ def _evaluate_batch(
     mapped,
     mapped_stacked,
     solve_options,
+    mesh_plan=None,
 ) -> "list[IMACResult]":
     """`evaluate_batch` body (the wrapper holds the root span).
 
@@ -410,6 +454,36 @@ def _evaluate_batch(
                 dtype=dtype, solve_options=solve_options,
             )
 
+    # Sharded execution: pad the stacked config axis to a multiple of
+    # the mesh axis (replicating entry 0 — trip-count-neutral, see
+    # distributed/sweep.pad_stacked) and place every stacked tensor with
+    # its `config`-axis sharding. Pre-staged inputs (explore's
+    # double-buffered shard_put) pass through as no-ops here.
+    c_real = len(cfgs)
+    shard = _resolve_shard(mesh_plan, c_real, noise_per_config, noise_key)
+    if shard is not None:
+        s_mesh, s_axis, n_shards = shard
+        c_pad = pad_count(c_real, n_shards)
+        with obs.trace(
+            "shard_stage", {"devices": n_shards, "pad": c_pad - c_real}
+        ):
+            def _stage(t):
+                t = pad_stacked(jnp.asarray(t), n_shards)
+                return jax.device_put(
+                    t, NamedSharding(s_mesh, stacked_spec(t, s_mesh, s_axis))
+                )
+
+            g_pos = tuple(_stage(t) for t in g_pos)
+            g_neg = tuple(_stage(t) for t in g_neg)
+            k = tuple(_stage(t) for t in k)
+            scal = {name: _stage(v) for name, v in scal.items()}
+        # The tol early-exit must see the *global* residual max inside
+        # shard_map; shard_axis routes a lax.pmax into the cond.
+        solve_options = dataclasses.replace(
+            solve_options if solve_options is not None else SolveOptions(),
+            shard_axis=s_axis,
+        )
+
     def forward_all(gp, gn, kk, sc, xb, nkey):
         """Forward every stacked configuration over a chunk of samples.
 
@@ -467,7 +541,45 @@ def _evaluate_batch(
 
     # prof.instrument_jit = the tracer's compile-vs-run span split plus
     # opt-in HLO cost analysis (hlo_flops / achieved_flops_per_s).
-    run_chunk = obs_prof.instrument_jit(jax.jit(forward_all), "solve_chunk")
+    if shard is not None:
+        stacked_specs = jax.tree_util.tree_map(
+            lambda t: stacked_spec(t, s_mesh, s_axis), (g_pos, g_neg, k, scal)
+        )
+        # Samples and the shared noise key replicate; the per-config
+        # outputs (pred, powers, residuals) concatenate back along the
+        # config axis, while the sweep counts — identical on every
+        # shard thanks to the global-pmax cond — come out replicated.
+        out_specs = (P(s_axis), P(s_axis), P(s_axis), P())
+        if noise_key is None:
+            def forward_nokey(gp, gn, kk, sc, xb):
+                return forward_all(gp, gn, kk, sc, xb, None)
+
+            inner = obs_prof.instrument_jit(
+                jax.jit(shard_map_compat(
+                    forward_nokey,
+                    mesh=s_mesh,
+                    in_specs=stacked_specs + (P(),),
+                    out_specs=out_specs,
+                )),
+                "solve_chunk",
+            )
+
+            def run_chunk(gp, gn, kk, sc, xb, nk):
+                return inner(gp, gn, kk, sc, xb)
+        else:
+            run_chunk = obs_prof.instrument_jit(
+                jax.jit(shard_map_compat(
+                    forward_all,
+                    mesh=s_mesh,
+                    in_specs=stacked_specs + (P(), P()),
+                    out_specs=out_specs,
+                )),
+                "solve_chunk",
+            )
+    else:
+        run_chunk = obs_prof.instrument_jit(
+            jax.jit(forward_all), "solve_chunk"
+        )
 
     n_chunks = (n + chunk - 1) // chunk
     keys = (
@@ -476,7 +588,10 @@ def _evaluate_batch(
         else [None] * n_chunks
     )
     preds, powers, residuals, layer_sweeps = [], [], [], None
-    with obs.trace("solve", {"chunks": n_chunks, "n_samples": n}):
+    solve_attrs = {"chunks": n_chunks, "n_samples": n}
+    if shard is not None:
+        solve_attrs["devices"] = n_shards
+    with obs.trace("solve", solve_attrs):
         for ci in range(n_chunks):
             xb = x[ci * chunk : (ci + 1) * chunk]
             pred, pwr, res, swp = run_chunk(
@@ -490,6 +605,11 @@ def _evaluate_batch(
     pred = jnp.concatenate(preds, axis=1)                      # (C, n)
     per_layer_power = jnp.sum(jnp.stack(powers), axis=0) / n   # (C, L)
     worst_res = jnp.max(jnp.stack(residuals), axis=0)          # (C, L)
+    if shard is not None:
+        # Drop the pad lanes (replicas of config 0) before measurement.
+        pred = pred[:c_real]
+        per_layer_power = per_layer_power[:c_real]
+        worst_res = worst_res[:c_real]
 
     if obs.enabled():
         # Solver convergence telemetry, recorded on the host from the

@@ -154,10 +154,18 @@ class SolveOptions:
         (``$REPRO_SOLVER_BACKEND``, else ``"scan"``).
       interpret: force Pallas interpret mode on/off; None = automatic
         (interpret off-TPU, with a single logged notice).
+      shard_axis: mesh axis name when the solve runs inside a
+        `shard_map` over a leading batch axis (sharded sweeps,
+        repro.distributed.sweep). The tol early-exit condition is a
+        *batch-global* residual max; under sharding it must be pmax'ed
+        across shards so every shard runs the same number of sweeps —
+        that is what keeps sharded results bitwise-identical to the
+        unsharded solve. None = no cross-shard reduction (default).
     """
 
     backend: Union[str, SolverBackend, TridiagFn, None] = None
     interpret: Optional[bool] = None
+    shard_axis: Optional[str] = None
 
     def resolved(self) -> SolverBackend:
         return get_backend(self.backend)
@@ -420,7 +428,10 @@ def solve_crossbar(
     backend = options.resolved()
     if backend.make_solve is not None:
         return backend.make_solve(options)(g, v_in, cp, stamps)
-    return _sweep_solve(g, v_in, cp, backend.make_tridiag(options), stamps)
+    return _sweep_solve(
+        g, v_in, cp, backend.make_tridiag(options), stamps,
+        shard_axis=options.shard_axis,
+    )
 
 
 def _sweep_solve(
@@ -429,6 +440,7 @@ def _sweep_solve(
     cp: CircuitParams,
     tridiag: TridiagFn,
     stamps: Optional[Stamps],
+    shard_axis: Optional[str] = None,
 ) -> CrossbarSolution:
     """The generic sweep loop: batched inner tridiag + SOR in jnp."""
     st = stamps or Stamps()
@@ -472,7 +484,13 @@ def _sweep_solve(
         # on the 32x32 Table-III workload).
         def w_cond(carry):
             _, res, i = carry
-            return jnp.logical_and(i < cp.gs_iters, jnp.max(res) > cp.tol)
+            rmax = jnp.max(res)
+            if shard_axis is not None:
+                # Inside shard_map the batch max only sees the local
+                # shard; pmax restores the batch-global trip count so
+                # sharded and unsharded solves sweep in lockstep.
+                rmax = jax.lax.pmax(rmax, shard_axis)
+            return jnp.logical_and(i < cp.gs_iters, rmax > cp.tol)
 
         def w_body(carry):
             vc, _, i = carry

@@ -4,3 +4,10 @@ from repro.distributed.compression import (  # noqa: F401
     ef_state_init,
 )
 from repro.distributed.overlap import ring_allgather_matmul  # noqa: F401
+from repro.distributed.sweep import (  # noqa: F401
+    MeshPlan,
+    as_mesh_plan,
+    pad_stacked,
+    shard_put,
+    stage_pipeline,
+)

@@ -1,0 +1,195 @@
+"""Multi-device sharded execution of stacked sweep groups.
+
+A design-space sweep (repro.explore) evaluates each structure group as
+ONE stacked solve over a leading config axis. That axis is
+embarrassingly parallel: this module shards it across a 1-D device mesh
+with `shard_map`, padding the group to a multiple of the mesh axis by
+replicating entry 0 — a duplicate of a real config leaves the
+batch-global convergence max unchanged, so together with the solver's
+cross-shard `pmax` (SolveOptions.shard_axis) the sharded solve runs the
+exact same sweep count and returns bitwise-identical results on the
+circuit-solve path. (The ideal-MVM path — parasitics=False — keeps
+predictions bitwise but its power einsum is reduction-order-sensitive
+to the local batch shape, so power matches only to ~1e-7 relative.)
+
+`MeshPlan` is the user-facing knob (`run_sweep(..., shard=...)` /
+`SweepSpec(shard=...)`): which devices, whether to overlap host→device
+staging of the next group with compute of the current one
+(double-buffered `device_put`), and whether to schedule largest groups
+first so the tail of the sweep is short.
+
+Everything here is mechanism only — policy (when to fall back to the
+unsharded path: tiny groups, per-config noise draws, transient groups)
+lives with the callers in core/evaluate and explore/engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_sweep_mesh
+from repro.sharding.rules import DEFAULT_RULES, logical_to_spec
+
+#: Logical name of the stacked leading config axis (sharding/rules.py
+#: maps it onto the mesh `data` axis when the dim size divides).
+CONFIG_AXIS = "config"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """How a sweep shards its structure groups across devices.
+
+    Attributes:
+      devices: number of devices for the 1-D sweep mesh (None = all).
+      axis: mesh axis name the config axis shards over.
+      min_group: smallest stacked-entry count worth sharding; smaller
+        groups run the ordinary single-device path (shard_map overhead
+        beats the win on tiny groups).
+      overlap: double-buffer host→device staging — issue the next
+        group's `device_put` before computing the current one.
+      largest_first: schedule groups by descending stacked size so the
+        sweep tail is short and devices drain together.
+      mesh: explicit Mesh override; None builds one from `devices`.
+    """
+
+    devices: Optional[int] = None
+    axis: str = "data"
+    min_group: int = 2
+    overlap: bool = True
+    largest_first: bool = True
+    mesh: Optional[Mesh] = None
+
+    @classmethod
+    def auto(cls) -> "MeshPlan":
+        """All visible devices, defaults everywhere."""
+        return cls()
+
+    @classmethod
+    def host(cls, n_devices: int) -> "MeshPlan":
+        """First `n_devices` devices (forced-host-device experiments)."""
+        return cls(devices=n_devices)
+
+    def build(self) -> Mesh:
+        if self.mesh is not None:
+            return self.mesh
+        return make_sweep_mesh(self.devices, axis=self.axis)
+
+    def axis_size(self) -> int:
+        return self.build().shape[self.axis]
+
+    def shape_str(self) -> str:
+        """Compact mesh description for ledger metadata ("data8")."""
+        mesh = self.build()
+        return "".join(f"{a}{mesh.shape[a]}" for a in mesh.axis_names)
+
+
+def as_mesh_plan(shard) -> Optional[MeshPlan]:
+    """Coerce the `shard=` argument: None/False, True, int, MeshPlan."""
+    if shard is None or shard is False:
+        return None
+    if shard is True:
+        return MeshPlan()
+    if isinstance(shard, MeshPlan):
+        return shard
+    if isinstance(shard, int):
+        return MeshPlan(devices=shard)
+    raise TypeError(
+        f"shard= must be a MeshPlan, bool, int or None; got {shard!r}"
+    )
+
+
+def pad_count(c: int, n: int) -> int:
+    """Smallest multiple of `n` that is >= `c`."""
+    return -(-c // n) * n
+
+
+def pad_stacked(x: jax.Array, n: int) -> jax.Array:
+    """Pad the leading axis to a multiple of `n` by replicating entry 0.
+
+    Replicating a *real* entry (rather than zero-filling) means the pad
+    lanes converge exactly like their original: the batch-global
+    residual max — and therefore the while_loop trip count — is
+    unchanged, which is what keeps padded sharded solves
+    bitwise-identical to the unsharded batch.
+    """
+    c = x.shape[0]
+    target = pad_count(c, n)
+    if target == c:
+        return x
+    fill = jnp.broadcast_to(x[:1], (target - c,) + x.shape[1:])
+    return jnp.concatenate([x, fill])
+
+
+def stacked_spec(x, mesh: Mesh, axis: str = "data") -> P:
+    """PartitionSpec for a stacked tensor: config axis over the mesh.
+
+    Resolved through sharding/rules.py so divisibility is checked the
+    same way as every other logical axis: a leading dim the mesh axis
+    does not divide comes back unsharded (replicated) instead of
+    erroring — the best-effort semantics `shard_put` staging relies on.
+    """
+    rules = DEFAULT_RULES
+    if axis != "data":
+        rules = rules.extend({CONFIG_AXIS: ((axis,), None)})
+    logical = (CONFIG_AXIS,) + (None,) * (x.ndim - 1)
+    return logical_to_spec(logical, x.shape, mesh, rules)
+
+
+def shard_put(tree, mesh: Mesh, axis: str = "data"):
+    """Best-effort async staging of stacked tensors onto the mesh.
+
+    Leaves whose leading dim the mesh axis divides are placed sharded;
+    the rest replicated (stacked_spec's divisibility fallback). Returns
+    as soon as the transfers are *issued* — `device_put` is async — so
+    a caller can stage group i+1 while group i computes.
+    """
+
+    def put(x):
+        if not hasattr(x, "ndim") or getattr(x, "ndim", 0) == 0:
+            return x
+        return jax.device_put(
+            x, NamedSharding(mesh, stacked_spec(x, mesh, axis))
+        )
+
+    return jax.tree_util.tree_map(put, tree)
+
+
+def stage_pipeline(
+    groups: "list", stage
+) -> "Iterator[tuple[int, object]]":
+    """Double-buffered iteration: stage group i+1, then yield group i.
+
+    `stage` issues (async) host→device transfers for one group and
+    returns the staged value. Because staging i+1 is dispatched before
+    the caller computes i, transfer and compute overlap — the spirit of
+    distributed/overlap.py's ring matmul, at group granularity.
+    """
+    if not groups:
+        return
+    staged = stage(groups[0])
+    for i in range(len(groups)):
+        current = staged
+        if i + 1 < len(groups):
+            staged = stage(groups[i + 1])
+        yield i, current
+
+
+def device_counts(mesh: Mesh) -> int:
+    return int(mesh.devices.size)
+
+
+__all__ = [
+    "CONFIG_AXIS",
+    "MeshPlan",
+    "as_mesh_plan",
+    "pad_count",
+    "pad_stacked",
+    "stacked_spec",
+    "shard_put",
+    "stage_pipeline",
+    "device_counts",
+]

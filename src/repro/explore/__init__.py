@@ -7,7 +7,12 @@ exploration — as a first-class engine:
   engine.run_sweep      batched, memoized evaluation (vmapped group solves)
   engine.explore        run_sweep + Pareto-front extraction
   pareto.pareto_front   non-dominated (accuracy, power, latency) points
-  cache.ResultCache     on-disk result memoization
+  cache.ResultCache     on-disk result memoization (concurrency-safe)
+  MeshPlan              multi-device sharded execution (run_sweep
+                        ``shard=`` / SweepSpec ``shard=``) — structure
+                        groups split across a device mesh, circuit-
+                        solve results bitwise-identical to the
+                        single-device engine
 
 Reliability sweeps: SweepSpec's `trials`/`sigma_rel`/`fault_rate`/...
 axes attach a repro.variability.VariabilitySpec to each point; run_sweep
@@ -27,6 +32,7 @@ Example::
     for p in front:
         print(p.name, p.accuracy, p.avg_power, p.latency)
 """
+from repro.distributed.sweep import MeshPlan
 from repro.explore.cache import ResultCache
 from repro.explore.engine import SweepResult, explore, run_sweep
 from repro.explore.pareto import (
@@ -39,6 +45,7 @@ from repro.explore.spec import SweepSpec
 
 __all__ = [
     "DEFAULT_OBJECTIVES",
+    "MeshPlan",
     "RELIABILITY_OBJECTIVES",
     "ResultCache",
     "SweepResult",

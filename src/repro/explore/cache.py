@@ -14,6 +14,8 @@ import dataclasses
 import hashlib
 import json
 import os
+import threading
+import uuid
 from typing import Optional, Sequence
 
 import jax
@@ -112,6 +114,16 @@ def result_key(
 class ResultCache:
     """Directory-backed result store: one JSON file per evaluation.
 
+    Safe for concurrent writers and readers sharing the directory (the
+    dedupe memo store of parallel sweep workers): every `put` writes to
+    a uniquely-named temp file and publishes it with an atomic
+    `os.replace` — two writers racing on one key both succeed and the
+    last rename wins with a complete entry; a reader never observes a
+    half-written file through the final name. `get` additionally
+    tolerates foreign partial/corrupt entries (a non-atomic writer, a
+    torn copy) by treating any unreadable file as a miss instead of
+    raising.
+
     Args:
       path: cache directory (created if missing).
       max_entries: optional size cap; when a `put` pushes the directory
@@ -138,15 +150,29 @@ class ResultCache:
 
     def get(self, key: str) -> "Optional[IMACResult | ReliabilityReport]":
         f = self._file(key)
-        if not os.path.exists(f):
+        try:
+            with open(f) as fh:
+                payload = json.load(fh)
+            result = self._decode(payload)
+        except FileNotFoundError:
             self.misses += 1
             obs.counter("cache_misses_total").inc()
             return None
-        with open(f) as fh:
-            payload = json.load(fh)
-        r = payload["result"]
+        except (OSError, ValueError, KeyError, TypeError):
+            # Partially-written or corrupt entry (a writer that skipped
+            # the atomic-rename protocol, a torn copy): a miss, not an
+            # error — the caller recomputes and `put` heals the file.
+            self.misses += 1
+            obs.counter("cache_misses_total").inc()
+            obs.event("cache_corrupt_entry", key=key[:16])
+            return None
         self.hits += 1
         obs.counter("cache_hits_total").inc()
+        return result
+
+    @staticmethod
+    def _decode(payload: dict) -> "IMACResult | ReliabilityReport":
+        r = payload["result"]
         if payload.get("kind", "imac") == "reliability":
             # JSON round-trip turns tuples into lists; restore them.
             return ReliabilityReport(**{
@@ -180,10 +206,24 @@ class ResultCache:
             "reliability" if isinstance(result, ReliabilityReport) else "imac"
         )
         payload = {"name": name, "kind": kind, "result": result._asdict()}
-        tmp = self._file(key) + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump(payload, fh)
-        os.replace(tmp, self._file(key))
+        # Unique temp name per writer (pid + thread + nonce): concurrent
+        # puts of the same key never stomp each other's temp file, and
+        # the atomic os.replace publishes only complete entries
+        # (last-writer-wins).
+        tmp = (
+            f"{self._file(key)}.{os.getpid()}."
+            f"{threading.get_ident()}.{uuid.uuid4().hex[:8]}.tmp"
+        )
+        try:
+            with open(tmp, "w") as fh:
+                json.dump(payload, fh)
+            os.replace(tmp, self._file(key))
+        finally:
+            if os.path.exists(tmp):  # replace failed mid-way
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
         if self.max_entries is not None:
             self.prune()
 

@@ -46,6 +46,7 @@ from repro.core.evaluate import (
 )
 from repro.core.imac import IMACConfig
 from repro.core.mapping import map_network
+from repro.distributed.sweep import MeshPlan, as_mesh_plan, shard_put
 from repro.explore.cache import (
     ResultCache,
     data_fingerprint,
@@ -108,6 +109,7 @@ def run_sweep(
     noise_key: Optional[jax.Array] = None,
     activation: str = "sigmoid",
     timing: "bool | TransientSpec | None" = None,
+    shard: "MeshPlan | bool | int | None" = None,
     verbose: bool = False,
 ) -> "list[SweepResult]":
     """Evaluate a design-space sweep with batching and memoization.
@@ -136,12 +138,30 @@ def run_sweep(
         default TransientSpec; a TransientSpec applies that one. Points
         that already carry cfg.transient keep their own spec. Pair with
         `pareto.TRANSIENT_OBJECTIVES` for energy-aware extraction.
+      shard: execute each structure group's stacked solve sharded
+        across a JAX device mesh — a `repro.distributed.sweep.MeshPlan`,
+        True (all visible devices), an int (device count), or None.
+        None falls back to the spec's own `SweepSpec.shard`. Groups
+        schedule largest-first, the next group's tensors stage onto the
+        mesh (double-buffered `device_put`) while the current one
+        computes, and circuit-solve results (parasitics=True) are
+        bitwise-identical to the unsharded engine — padding replicates
+        a real config and the solver's convergence test is pmax'ed
+        across shards, so trip counts match. (Ideal-MVM points keep
+        bitwise predictions; their power agrees to ~1e-7 relative —
+        the einsum's reduction order follows the local batch shape.)
+        Read-noise Monte-Carlo points and the transient part of
+        timing sweeps keep their unsharded path.
       verbose: print per-group progress lines.
 
     Returns:
       One SweepResult per point, in input order.
     """
     items = _as_points(points)
+    if shard is None and isinstance(points, SweepSpec):
+        shard = points.shard
+    plan = as_mesh_plan(shard)
+    mesh = plan.build() if plan is not None else None
     t_run0 = time.perf_counter()
     with obs.trace("run_sweep", {"points": len(items)}):
         if timing:
@@ -229,11 +249,13 @@ def run_sweep(
         # only on the spec's seed (not on the point's position in the stack)
         # — identical results to a direct run_variability call, and safe to
         # memoize across differently-composed sweeps.
-        for gi, (skey, idxs) in enumerate(groups.items()):
-            with obs.trace(
-                f"group[{gi}]", {"configs": len(idxs), "group": gi}
-            ) as g_span:
-                t0 = time.perf_counter()
+        # Phase A — prepare every group host-side: expand Monte-Carlo
+        # trials, build the stacked mapping, note solo points. Kept
+        # separate from execution so the scheduler can reorder groups
+        # and the stager can work one group ahead.
+        prepared = []
+        with obs.trace("prepare", {"groups": len(groups)}):
+            for skey, idxs in groups.items():
                 entry_cfgs, stacks, spans, solo = [], [], [], []
                 for i in idxs:
                     cfg = items[i][1]
@@ -261,6 +283,64 @@ def run_sweep(
                     entry_cfgs.extend(tcfgs)
                     stacks.append(tstacked)
                     spans.append((i, len(tcfgs), vspec))
+                prepared.append({
+                    "skey": skey,
+                    "idxs": idxs,
+                    "entry_cfgs": entry_cfgs,
+                    "stacked": concat_mapped(stacks) if stacks else None,
+                    "spans": spans,
+                    "solo": solo,
+                })
+
+        # Scheduler: largest stacked batch first — the wide groups
+        # saturate the mesh while the narrow tail drains quickly.
+        if plan is not None and plan.largest_first:
+            prepared.sort(key=lambda g: len(g["entry_cfgs"]), reverse=True)
+
+        def _stage(group):
+            # Double-buffered host→device staging: issue the (async)
+            # device_put of the next group's stacked tensors while the
+            # current group computes. Best-effort — non-divisible
+            # groups stage replicated and evaluate_batch pads/shards
+            # them itself; transient groups integrate unsharded, so
+            # their tensors stay on the default device.
+            if (
+                plan is not None
+                and plan.overlap
+                and group["stacked"] is not None
+                and group["entry_cfgs"][0].transient is None
+            ):
+                group = dict(
+                    group,
+                    stacked=[
+                        dataclasses.replace(
+                            m,
+                            g_pos=shard_put(m.g_pos, mesh, plan.axis),
+                            g_neg=shard_put(m.g_neg, mesh, plan.axis),
+                            k=shard_put(m.k, mesh, plan.axis),
+                        )
+                        for m in group["stacked"]
+                    ],
+                )
+            return group
+
+        staged = iter(prepared)
+        if plan is not None and plan.overlap:
+            from repro.distributed.sweep import stage_pipeline
+
+            staged = (g for _, g in stage_pipeline(prepared, _stage))
+
+        # Phase B — one batched (optionally sharded) solve per group.
+        for gi, group in enumerate(staged):
+            skey, idxs = group["skey"], group["idxs"]
+            entry_cfgs, spans, solo = (
+                group["entry_cfgs"], group["spans"], group["solo"]
+            )
+            g_attrs = {"configs": len(idxs), "group": gi}
+            if plan is not None:
+                g_attrs["devices"] = plan.axis_size()
+            with obs.trace(f"group[{gi}]", g_attrs) as g_span:
+                t0 = time.perf_counter()
                 g_span.set("stacked", len(entry_cfgs))
                 g_span.set("solo", len(solo))
                 batch = evaluate_batch(
@@ -273,7 +353,8 @@ def run_sweep(
                     variation_key=variation_key,
                     noise_key=noise_key,
                     activation=activation,
-                    mapped_stacked=concat_mapped(stacks) if stacks else None,
+                    mapped_stacked=group["stacked"],
+                    mesh_plan=plan,
                 ) if entry_cfgs else []
                 for i in solo:
                     name, cfg = items[i]
@@ -306,14 +387,25 @@ def run_sweep(
                     if cache is not None:
                         cache.put(keys[i], res, name=name)
 
+        elapsed = time.perf_counter() - t_run0
+        derived = f"points={len(items)};groups={len(groups)}"
+        if plan is not None:
+            derived += f";mesh={plan.shape_str()}"
+        if obs.enabled() and elapsed > 0:
+            obs.gauge("sweep_points_per_s").set(len(items) / elapsed)
         # Opt-in perf-trajectory entry (obs enabled + REPRO_OBS_LEDGER
-        # set): us/point with the metrics snapshot riding along.
-        obs.ledger.record_engine_run(
-            "run_sweep",
-            time.perf_counter() - t_run0,
-            count=len(items),
-            derived=f"points={len(items)};groups={len(groups)}",
-        )
+        # set): us/point with the metrics snapshot riding along. Sharded
+        # runs tag their mesh shape so regression baselines stay
+        # per-device-population (ledger.ENV_KEYS).
+        with obs.ledger.mesh_context(
+            plan.shape_str() if plan is not None else None
+        ):
+            obs.ledger.record_engine_run(
+                "run_sweep",
+                elapsed,
+                count=len(items),
+                derived=derived,
+            )
         return [r for r in results if r is not None]
 
 

@@ -167,6 +167,13 @@ class SweepSpec:
       mode: 'grid' (cross product) or 'random' (independent draws).
       samples: number of draws for random mode.
       seed: RNG seed for random mode.
+      shard: multi-device execution request carried by the spec —
+        a `repro.distributed.sweep.MeshPlan`, True (all devices), an
+        int (device count), or None (single device). `run_sweep` picks
+        it up unless its own ``shard=`` argument overrides it. Sharded
+        circuit-solve results are bitwise-identical to the unsharded
+        engine (see run_sweep's ``shard`` docs for the ideal-MVM
+        power caveat).
     """
 
     base: IMACConfig
@@ -174,11 +181,14 @@ class SweepSpec:
     mode: str = "grid"
     samples: int = 0
     seed: int = 0
+    shard: "object" = None
 
     @classmethod
-    def grid(cls, base: IMACConfig = IMACConfig(), **axes) -> "SweepSpec":
+    def grid(
+        cls, base: IMACConfig = IMACConfig(), *, shard=None, **axes
+    ) -> "SweepSpec":
         """Full cross product of the given axes."""
-        return cls(base=base, axes=_freeze_axes(axes), mode="grid")
+        return cls(base=base, axes=_freeze_axes(axes), mode="grid", shard=shard)
 
     @classmethod
     def random(
@@ -186,6 +196,8 @@ class SweepSpec:
         base: IMACConfig = IMACConfig(),
         samples: int = 16,
         seed: int = 0,
+        *,
+        shard=None,
         **axes,
     ) -> "SweepSpec":
         """`samples` points drawn uniformly per axis (with replacement)."""
@@ -195,6 +207,7 @@ class SweepSpec:
             mode="random",
             samples=samples,
             seed=seed,
+            shard=shard,
         )
 
     @property

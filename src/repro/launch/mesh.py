@@ -17,6 +17,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_sweep_mesh(n_devices: "int | None" = None, axis: str = "data"):
+    """1-D mesh over the sweep `data` axis (stacked config batches).
+
+    The sharded sweep engine (repro.distributed.sweep.MeshPlan) splits
+    each structure group's leading config axis across this mesh; a
+    single named axis keeps the shard_map specs and the solver's
+    cross-shard convergence pmax trivially aligned.
+    """
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))
+
+
 def make_dev_mesh(n_devices: "int | None" = None):
     """Small mesh over whatever devices exist (tests/examples)."""
     n = n_devices or len(jax.devices())

@@ -20,6 +20,7 @@ Path resolution: an explicit ``path`` argument, else the
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import subprocess
@@ -33,8 +34,41 @@ ENTRY_SCHEMA = 1
 DEFAULT_LEDGER = os.path.join("artifacts", "perf_ledger.jsonl")
 
 #: Metadata keys a well-formed entry carries (regress matches runs on
-#: the environment subset so CPU history never gates a TPU run).
-ENV_KEYS = ("jax_backend", "device_platform", "device_count")
+#: the environment subset so CPU history never gates a TPU run, and —
+#: via mesh_shape — a sharded sweep never gates a single-device one).
+ENV_KEYS = ("jax_backend", "device_platform", "device_count", "mesh_shape")
+
+# Ambient mesh tag for entries written while a sharded engine run is in
+# flight ("data8" for an 8-wide sweep mesh; None = single device).
+# Entries predating this key — and single-device runs — read back as
+# None through dict.get, so old history keeps matching unsharded runs.
+# Seedable via $REPRO_MESH_SHAPE so whole bench processes (the CI
+# mesh-smoke job) can tag every entry they write.
+_MESH_CONTEXT: "Optional[str]" = os.environ.get("REPRO_MESH_SHAPE") or None
+
+
+def current_mesh_context() -> "Optional[str]":
+    """The mesh tag new entries will carry ("data8"), or None."""
+    return _MESH_CONTEXT
+
+
+def set_mesh_context(shape: "Optional[str]") -> None:
+    global _MESH_CONTEXT
+    _MESH_CONTEXT = shape
+
+
+@contextlib.contextmanager
+def mesh_context(shape: "Optional[str]"):
+    """Scope a mesh tag over ledger writes; None leaves the tag as-is."""
+    if shape is None:
+        yield
+        return
+    prev = _MESH_CONTEXT
+    set_mesh_context(shape)
+    try:
+        yield
+    finally:
+        set_mesh_context(prev)
 
 
 def default_path() -> str:
@@ -80,6 +114,7 @@ def run_metadata() -> dict:
         "jax_backend": "unknown",
         "device_platform": "unknown",
         "device_count": 0,
+        "mesh_shape": current_mesh_context(),
     }
     try:
         import jax
@@ -142,6 +177,8 @@ def make_entry(
     meta = dict(meta) if meta is not None else run_metadata()
     if "git_dirty" not in meta:
         meta["git_dirty"] = git_state()[1]
+    if "mesh_shape" not in meta:
+        meta["mesh_shape"] = current_mesh_context()
     meta.pop("schema_version", None)  # BENCH json versioning, not ours
     now = time.time()
     return {

@@ -63,6 +63,12 @@ DEFAULT_RULES = AxisRules(
         "conv": (None,),
         "state": (None,),
         "norm": (None,),
+        # --- sweep-engine axes ---
+        # Leading stacked-config axis of a design-space sweep group
+        # (repro.distributed.sweep): shards over `data` when divisible,
+        # else stays replicated (the staging fallback for non-padded
+        # remainders — padding makes it divisible inside the engine).
+        "config": (("data",), None),
         # --- activation axes ---
         "act_batch": (("pod", "data"), ("data",), None),
         "act_seq": (None,),                  # overridden to ("model",) for SP

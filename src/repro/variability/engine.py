@@ -34,6 +34,7 @@ from repro.core.digital import Params
 from repro.core.evaluate import evaluate_batch
 from repro.core.imac import IMACConfig
 from repro.core.mapping import MappedLayer, map_network
+from repro.distributed.sweep import as_mesh_plan
 from repro.variability.report import ReliabilityReport, summarize
 from repro.variability.spec import VariabilitySpec
 
@@ -162,6 +163,7 @@ def run_variability(
     chunk: int = 256,
     noise_key: Optional[jax.Array] = None,
     activation: str = "sigmoid",
+    shard=None,
 ) -> ReliabilityReport:
     """Batched Monte-Carlo reliability analysis of one design point.
 
@@ -185,6 +187,13 @@ def run_variability(
         resolved technology has read noise and no key is given. Noise is
         drawn independently per trial (`noise_per_config`).
       activation: digital reference activation.
+      shard: shard the stacked trial axis across a device mesh — a
+        `repro.distributed.sweep.MeshPlan`, True, an int device count,
+        or None (single device). Trials with per-trial read-noise draws
+        automatically keep the unsharded path (the draws depend on the
+        full stacked shape), so sharded reports stay bitwise-identical
+        on the circuit-solve path (ideal-MVM power: see
+        core.evaluate.evaluate_batch's ``mesh_plan`` caveat).
 
     Returns:
       ReliabilityReport with accuracy distribution, worst-case power and
@@ -224,6 +233,7 @@ def run_variability(
             noise_per_config=True,
             activation=activation,
             mapped_stacked=mapped_stacked,
+            mesh_plan=as_mesh_plan(shard),
         )
         with obs.trace("summarize"):
             if collapse:

@@ -1,0 +1,116 @@
+"""repro.distributed under a real multi-device mesh.
+
+tests/test_substrate.py exercises ring_allgather_matmul and
+compressed_allreduce on a degenerate (1,) mesh; these tests run the
+same collectives across every visible device, so the ring permutation
+and the psum averaging actually cross device boundaries. They skip on
+single-device hosts — CI's mesh-smoke job launches pytest with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import (
+    compressed_allreduce,
+    ef_state_init,
+    ring_allgather_matmul,
+)
+
+N_DEVICES = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEVICES < 2,
+    reason="needs a multi-device mesh "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def _mesh():
+    return jax.make_mesh((N_DEVICES,), ("data",))
+
+
+# ------------------------------------------------- ring allgather matmul
+
+
+@multi_device
+def test_ring_allgather_matmul_matches_dense():
+    """The ring permutation over n real shards reproduces x @ w."""
+    mesh = _mesh()
+    k = 8 * N_DEVICES  # contraction dim must split evenly over the ring
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, 6))
+    y = ring_allgather_matmul(x, w, mesh)
+    assert y.shape == (5, 6)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ w), rtol=2e-5, atol=1e-5
+    )
+
+
+@multi_device
+def test_ring_allgather_matmul_rejects_indivisible_k():
+    mesh = _mesh()
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, N_DEVICES * 4 + 1))
+    w = jax.random.normal(
+        jax.random.PRNGKey(1), (N_DEVICES * 4 + 1, 2)
+    )
+    with pytest.raises((AssertionError, ValueError)):
+        ring_allgather_matmul(x, w, mesh)
+
+
+@multi_device
+def test_ring_allgather_matmul_custom_axis_name():
+    mesh = jax.make_mesh((N_DEVICES,), ("ring",))
+    k = 4 * N_DEVICES
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, k))
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, 3))
+    y = ring_allgather_matmul(x, w, mesh, axis_name="ring")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ w), rtol=2e-5, atol=1e-5
+    )
+
+
+# --------------------------------------------------- compressed allreduce
+
+
+@multi_device
+def test_compressed_allreduce_multi_device_mean():
+    """int8 quantize → psum-mean across n real ranks → dequantized mean
+    stays within quantization error of the true gradients."""
+    mesh = _mesh()
+    grads = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (64, 32)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (32,)),
+    }
+    st = ef_state_init(grads)
+    mean, st2 = compressed_allreduce(grads, st, mesh)
+    for leaf in ("w", "b"):
+        # mean + residual reconstructs the input (error feedback invariant).
+        np.testing.assert_allclose(
+            np.asarray(mean[leaf] + st2.residual[leaf]),
+            np.asarray(grads[leaf]),
+            rtol=1e-5, atol=1e-6,
+        )
+        err = np.max(np.abs(np.asarray(mean[leaf] - grads[leaf])))
+        assert err < np.max(np.abs(np.asarray(grads[leaf]))) / 100
+
+
+@multi_device
+def test_error_feedback_accumulates_multi_device():
+    mesh = _mesh()
+    g = {"w": jnp.full((256,), 1e-4)}  # vanishes under int8 alone
+    st = ef_state_init(g)
+    total = jnp.zeros((256,))
+    for _ in range(50):
+        mean, st = compressed_allreduce(g, st, mesh)
+        total = total + mean["w"]
+    np.testing.assert_allclose(float(jnp.mean(total)) / 50, 1e-4, rtol=0.05)
+
+
+@multi_device
+def test_compressed_allreduce_output_replicated():
+    """Every device must hold the same averaged gradient."""
+    mesh = _mesh()
+    g = {"w": jax.random.normal(jax.random.PRNGKey(4), (16, 8))}
+    mean, _ = compressed_allreduce(g, ef_state_init(g), mesh)
+    assert mean["w"].sharding.is_fully_replicated
